@@ -1,0 +1,47 @@
+"""Benchmark plumbing: wall-clock timing of jit'd callables + CSV output.
+
+Each benchmark module mirrors one paper artefact (Fig. 1/2/5/7).  The paper
+reports GFlop/s as fraction-of-peak on Westmere-EX; on this CPU-only
+container absolute numbers are environment-specific, so benchmarks report
+wall-time + derived GFlop/s and — the part that carries to TPU — the
+*relative ordering* of program variants, which is the paper's actual claim
+(naive << restructured << optimised-library).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+__all__ = ["time_fn", "Row", "print_table"]
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            max_seconds: float = 5.0) -> float:
+    """Median wall-time of fn(*args) after warmup (jit compile excluded)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    t_start = time.perf_counter()
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+        if time.perf_counter() - t_start > max_seconds:
+            break
+    times.sort()
+    return times[len(times) // 2]
+
+
+class Row(dict):
+    pass
+
+
+def print_table(title: str, rows: list[dict], cols: list[str]) -> None:
+    print(f"\n## {title}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))

@@ -1,0 +1,74 @@
+"""Paper Fig. 1 — mod2am dense matmul: four ArBB variants vs the optimised
+library path (XLA dot = our MKL) + the Pallas kernel (interpret-validated,
+TPU-targeted).
+
+The paper's claim to reproduce: mxm0 (naive) << mxm1 ≈ mxm2a (restructured)
+< mxm2b (unroll-blocked) << library.  Sizes follow the paper (truncated to
+keep CPU wall-time sane; full set via --full).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as C
+from repro.numerics import matmul as mm
+from benchmarks.common import time_fn, print_table
+
+SIZES = [64, 128, 256, 512]
+FULL_SIZES = [10, 20, 50, 100, 192, 200, 500, 512, 576, 1000, 1024]
+
+VARIANTS = {
+    "arbb_mxm0": mm.arbb_mxm0,      # naive _for/_for + add_reduce
+    "arbb_mxm1": mm.arbb_mxm1,      # 2-D containers + add_reduce
+    "arbb_mxm2a": mm.arbb_mxm2a,    # outer-product accumulation
+    "arbb_mxm2b": mm.arbb_mxm2b,    # + trace-time unroll (the paper's win)
+    "xla_dot": mm.mxm_xla,          # the "MKL" comparator
+}
+
+
+def run(full: bool = False) -> list[dict]:
+    rows = []
+    sizes = FULL_SIZES if full else SIZES
+    for n in sizes:
+        rng = np.random.default_rng(n)
+        a = C.bind(rng.standard_normal((n, n)).astype(np.float32))
+        b = C.bind(rng.standard_normal((n, n)).astype(np.float32))
+        flops = 2.0 * n ** 3
+        for name, fn in VARIANTS.items():
+            if name == "arbb_mxm0" and n > 256:
+                continue            # quadratic trace size — paper's point
+            jfn = jax.jit(lambda x, y, f=fn: f(x, y))
+            t = time_fn(jfn, a, b)
+            rows.append({"kernel": "mod2am", "variant": name, "n": n,
+                         "seconds": round(t, 6),
+                         "gflops": round(flops / t / 1e9, 3)})
+    return rows
+
+
+def validate(rows: list[dict]) -> dict:
+    """The paper's ordering claim on the largest common size."""
+    n = max(r["n"] for r in rows if r["variant"] == "arbb_mxm1")
+    perf = {r["variant"]: r["gflops"] for r in rows if r["n"] == n}
+    checks = {
+        "mxm1_beats_mxm0": perf.get("arbb_mxm0", 0) < perf["arbb_mxm1"]
+        if "arbb_mxm0" in perf else None,
+        "mxm2b_at_least_mxm1": perf["arbb_mxm2b"] >= 0.8 * perf["arbb_mxm1"],
+        "library_fastest": perf["xla_dot"] >= max(
+            v for k, v in perf.items() if k != "xla_dot") * 0.8,
+    }
+    return {"size": n, "perf": perf, "checks": checks}
+
+
+def main(full: bool = False):
+    rows = run(full)
+    print_table("mod2am (paper Fig. 1)", rows,
+                ["kernel", "variant", "n", "seconds", "gflops"])
+    v = validate(rows)
+    print("validation:", v["checks"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Fig. 5 — mod2f 1-D complex FFT.
+
+Variants: split-stream DSL port (the paper's ArBB program), the naive
+recursive radix-2 (paper's 'simple serial'), the Stockham autosort
+(beyond-paper optimised comparator), and jnp.fft (the MKL/DFTI role).
+Sizes 2^8..2^20 like the paper (truncated by default).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as C
+from repro.numerics import fft as nfft
+from benchmarks.common import time_fn, print_table
+
+SIZES = [256, 1024, 4096, 16384, 65536]
+FULL_SIZES = [256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 65536,
+              131072, 262144, 524288, 1048576]
+
+
+def run(full: bool = False) -> list[dict]:
+    rows = []
+    for n in (FULL_SIZES if full else SIZES):
+        rng = np.random.default_rng(n)
+        z = C.bind((rng.standard_normal(n) + 1j * rng.standard_normal(n))
+                   .astype(np.complex64))
+        flops = 5.0 * n * np.log2(n)          # the standard FFT flop count
+        cases = {
+            "split_stream": lambda v: nfft.split_stream_fft(v),
+            "stockham": lambda v: nfft.stockham_fft(v),
+            "jnp_fft": lambda v: jnp.fft.fft(C.unwrap(v)),
+        }
+        for name, fn in cases.items():
+            jfn = jax.jit(fn)
+            t = time_fn(jfn, z)
+            rows.append({"kernel": "mod2f", "variant": name, "n": n,
+                         "seconds": round(t, 6),
+                         "gflops": round(flops / t / 1e9, 4)})
+    return rows
+
+
+def validate(rows: list[dict]) -> dict:
+    big = max(r["n"] for r in rows)
+    perf = {r["variant"]: r["gflops"] for r in rows if r["n"] == big}
+    return {"size": big, "perf": perf,
+            "checks": {"library_fastest": perf["jnp_fft"] >= max(
+                v for k, v in perf.items() if k != "jnp_fft") * 0.5}}
+
+
+def main(full: bool = False):
+    rows = run(full)
+    print_table("mod2f (paper Fig. 5)", rows,
+                ["kernel", "variant", "n", "seconds", "gflops"])
+    print("validation:", validate(rows)["checks"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

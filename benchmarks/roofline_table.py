@@ -1,0 +1,61 @@
+"""§Roofline table: renders the dry-run JSONL (results/dryrun_baseline.jsonl
+or a path argument) into the EXPERIMENTS.md roofline table.
+
+This is the scaling artefact replacing the paper's thread-scaling curves
+(Figs 1-2 c/d): instead of ARBB_NUM_CORES sweeps we report per-(arch×shape×
+mesh) compute/memory/collective times on the production meshes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+_RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+# prefer the depth-corrected probe sweep (§Roofline methodology) when it
+# exists; fall back to the scanned-program baseline
+DEFAULT = (os.path.join(_RESULTS, "roofline_corrected.jsonl")
+           if os.path.exists(os.path.join(_RESULTS,
+                                          "roofline_corrected.jsonl"))
+           else os.path.join(_RESULTS, "dryrun_baseline.jsonl"))
+
+
+def load(path: str) -> list[dict]:
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def render(rows: list[dict], mesh: str = "16x16") -> str:
+    out = ["| arch | shape | t_compute | t_memory | t_collective | dominant "
+           "| roofline | MODEL/HLO flops |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f} ms "
+            f"| {r['t_memory']*1e3:.1f} ms | {r['t_collective']*1e3:.1f} ms "
+            f"| {r['dominant']} | {r['roofline_fraction']:.1%} "
+            f"| {r['useful_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def main(path: str = DEFAULT):
+    rows = load(path)
+    for mesh in ("16x16", "2x16x16"):
+        have = [r for r in rows if r.get("mesh") == mesh
+                and r.get("status") == "ok"]
+        if not have:
+            continue
+        print(f"\n### mesh {mesh} ({len(have)} cells)\n")
+        print(render(rows, mesh))
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    if skipped:
+        seen = sorted({(r['arch'], r['shape']) for r in skipped})
+        print(f"\nskipped cells ({len(seen)}): "
+              + ", ".join(f"{a}×{s}" for a, s in seen))
+    return rows
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else DEFAULT)

@@ -1,0 +1,63 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run           # all, short inputs
+    PYTHONPATH=src python -m benchmarks.run --full    # paper's full sweeps
+    PYTHONPATH=src python -m benchmarks.run --only mod2am
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="the paper's full input sweeps (slower)")
+    ap.add_argument("--only", default=None,
+                    choices=["mod2am", "mod2as", "mod2f", "cg", "roofline"])
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import mod2am, mod2as, mod2f, cg, roofline_table
+
+    suites = {
+        "mod2am": lambda: mod2am.main(args.full),
+        "mod2as": lambda: mod2as.main(args.full),
+        "mod2f": lambda: mod2f.main(args.full),
+        "cg": lambda: cg.main(args.full),
+        "roofline": lambda: _roofline(roofline_table),
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    all_rows = {}
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            all_rows[name] = fn()
+        except FileNotFoundError as e:
+            print(f"[{name}] skipped: {e}")
+        print(f"[{name}] done in {time.time()-t0:.1f}s")
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({k: v for k, v in all_rows.items() if v is not None},
+                      f, default=str)
+    print("\nbenchmarks complete")
+    return 0
+
+
+def _roofline(mod):
+    try:
+        return mod.main()
+    except FileNotFoundError:
+        print("roofline table: run launch/dryrun.py first "
+              "(results/dryrun_baseline.jsonl missing)")
+        return None
+
+
+if __name__ == "__main__":
+    sys.exit(main())

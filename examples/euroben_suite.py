@@ -1,0 +1,65 @@
+"""The paper's whole benchmark suite as one runnable scenario: the four
+EuroBen/solver kernels in the DSL, validated and timed (a miniature of
+benchmarks/run.py for interactive use).
+
+    PYTHONPATH=src python examples/euroben_suite.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+import repro.core as arbb
+from repro.numerics import fft as nfft, matmul as mm, solvers, sparse, spmv
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # mod2am --------------------------------------------------------------
+    n = 256
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+    t0 = time.perf_counter()
+    c = mm.arbb_mxm2b(arbb.bind(a), arbb.bind(b)).read()
+    np.testing.assert_allclose(c, a @ b, rtol=2e-3, atol=2e-3)
+    print(f"mod2am  {n}x{n}  arbb_mxm2b ok   ({time.perf_counter()-t0:.2f}s)")
+
+    # mod2as --------------------------------------------------------------
+    n = 512
+    A = sparse.random_sparse(n, 4.0, seed=1)
+    x = rng.standard_normal(n).astype(np.float32)
+    t0 = time.perf_counter()
+    y = spmv.arbb_spmv2(sparse.csr_from_dense(A), arbb.bind(x)).read()
+    np.testing.assert_allclose(y, A @ x, rtol=1e-3, atol=1e-3)
+    print(f"mod2as  {n} ({4.0}% fill) arbb_spmv2 ok ({time.perf_counter()-t0:.2f}s)")
+
+    # mod2f ---------------------------------------------------------------
+    n = 4096
+    z = (rng.standard_normal(n) + 1j * rng.standard_normal(n)).astype(
+        np.complex64)
+    t0 = time.perf_counter()
+    out = nfft.split_stream_fft(arbb.bind(z)).read()
+    np.testing.assert_allclose(out, np.fft.fft(z), rtol=1e-2, atol=1e-3 * n)
+    print(f"mod2f   {n}-point split-stream ok ({time.perf_counter()-t0:.2f}s)")
+
+    # cg ------------------------------------------------------------------
+    n, bw = 512, 31
+    A = sparse.banded_spd(n, bw, seed=2)
+    bvec = rng.standard_normal(n).astype(np.float32)
+    t0 = time.perf_counter()
+    res = solvers.cg_solve(sparse.dia_from_dense(A), arbb.bind(bvec),
+                           stop=1e-10, max_iters=2 * n, backend="dia")
+    xs = res.x.read()
+    rel = np.linalg.norm(A @ xs - bvec) / np.linalg.norm(bvec)
+    print(f"cg      {n} bw={bw} converged in {int(res.iterations)} iters "
+          f"(residual {rel:.1e}, {time.perf_counter()-t0:.2f}s)")
+
+    print("\nall four paper kernels validated")
+
+
+if __name__ == "__main__":
+    main()

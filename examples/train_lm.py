@@ -1,0 +1,77 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps on real data (this repository's own source code, byte-level),
+with checkpointing and restart.
+
+    PYTHONPATH=src python examples/train_lm.py                # ~100M, 200 steps
+    PYTHONPATH=src python examples/train_lm.py --tiny         # CI-sized
+"""
+import argparse
+import dataclasses
+import glob
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.data import ByteCorpus
+from repro.launch.train import Trainer, reduce_config
+
+
+def repo_corpus() -> bytes:
+    """This repo's own Python source as the training corpus."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    blobs = []
+    for path in sorted(glob.glob(os.path.join(root, "src", "**", "*.py"),
+                                 recursive=True)):
+        with open(path, "rb") as f:
+            blobs.append(f.read())
+    return b"\n".join(blobs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true", help="CI-sized run")
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params (sized for accelerators; slow on CPU)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    base = get_config("qwen3-1.7b")
+    if args.tiny:
+        cfg = reduce_config(base, 0.08, seq_len=128)
+        steps, batch, seq = args.steps or 30, 4, 128
+    elif args.full:
+        # ~100M params: 12L, d=640, 10 heads — qwen3 family, byte vocab
+        cfg = dataclasses.replace(
+            reduce_config(base, 0.4, seq_len=512),
+            num_layers=12, d_model=640, num_heads=10, num_kv_heads=5,
+            head_dim=64, d_ff=1920)
+        steps, batch, seq = args.steps or 200, 8, 512
+    else:
+        # default: ~25M params — a few hundred steps complete on CPU
+        cfg = dataclasses.replace(
+            reduce_config(base, 0.3, seq_len=256),
+            num_layers=10, d_model=384, num_heads=6, num_kv_heads=3,
+            head_dim=64, d_ff=1152)
+        steps, batch, seq = args.steps or 200, 8, 256
+
+    cfg = dataclasses.replace(cfg, vocab_size=256)     # byte-level
+    blob = repo_corpus()
+    print(f"corpus: {len(blob)/1e6:.1f} MB of source; "
+          f"model: {cfg.param_count()/1e6:.1f}M params")
+
+    data = ByteCorpus(blob, seq_len=seq, global_batch=batch)
+    trainer = Trainer(cfg, ckpt_dir=args.ckpt_dir, save_every=50,
+                      lr=6e-4, total_steps=steps)
+    out = trainer.fit(data, steps, log_every=10)
+
+    # a byte LM on code should crack ln(256)=5.55 fast; report the curve
+    first, last = out["history"][0]["loss"], out["final_loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"({'LEARNED' if last < first * 0.8 else 'check hyperparams'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Architecture registry: importing this package registers all configs."""
+from repro.configs.base import ModelConfig, get_config, list_configs, REGISTRY
+from repro.configs import (  # noqa: F401
+    qwen3_1p7b,
+    gemma_2b,
+    phi3_mini_3p8b,
+    minicpm_2b,
+    qwen2_vl_72b,
+    musicgen_medium,
+    qwen3_moe_30b_a3b,
+    arctic_480b,
+    mamba2_370m,
+    zamba2_7b,
+    euroben,
+)
+
+__all__ = ["ModelConfig", "get_config", "list_configs", "REGISTRY"]

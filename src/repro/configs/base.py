@@ -1,0 +1,178 @@
+"""ModelConfig: one schema covering all 10 assigned architectures + registry.
+
+Every field is a static (hashable) property so configs can key jit caches.
+Families: dense | moe | ssm | hybrid | vlm | audio  (vlm/audio are dense
+backbones + a stubbed modality frontend per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig", "register", "get_config", "list_configs", "REGISTRY"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    vocab_size: int
+
+    # attention (unused for pure-ssm)
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    m_rope: bool = False
+    mrope_sections: tuple[int, ...] = ()     # splits head_dim/2 across t/h/w
+
+    # MLP
+    d_ff: int = 0
+    mlp_kind: str = "swiglu"                 # swiglu | geglu
+
+    # embeddings
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False           # gemma: * sqrt(d_model)
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    dense_residual: bool = False             # arctic: parallel dense MLP
+    capacity_factor: float = 1.25
+    # EP dispatch schedule: "gather" = scatter into E-replicated slabs +
+    # token-gather with all-reduce (the naive GSPMD lowering); "a2a" =
+    # all-to-all resharding between the d-sharded residual stream and the
+    # E-sharded expert compute (§Perf iteration 1)
+    moe_dispatch: str = "a2a"
+
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_groups: int = 1
+    conv_width: int = 4
+
+    # hybrid (zamba2): one weight-shared attention block every N ssm layers
+    attn_every: int = 0
+
+    # modality frontend stub (vlm/audio): frontend_len positions arrive as
+    # precomputed d_model embeddings instead of token ids
+    frontend: Optional[str] = None           # None | "vision" | "audio"
+    frontend_len: int = 0
+    grid_hw: int = 32                        # vlm patch raster width (M-RoPE)
+
+    # dtypes / execution
+    dtype: str = "bfloat16"                  # activations
+    param_dtype: str = "float32"             # storage
+    remat: bool = True
+    scan_layers: bool = True
+    logit_softcap: float = 0.0
+
+    # ------------------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding rows padded to a multiple of 256 — shardable 16-way and
+        MXU-lane aligned (the GPT-NeoX/Megatron convention).  Logits are
+        sliced back to ``vocab_size`` so semantics don't change."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence mixing => long_500k applies."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (drives 6ND roofline MODEL_FLOPS)."""
+        d, v = self.d_model, self.vocab_size
+        n = 0
+        n += v * d * (1 if self.tie_embeddings else 2)
+        if self.family in ("dense", "vlm", "audio"):
+            per = (self.num_heads + 2 * self.num_kv_heads) * self.head_dim * d \
+                + self.num_heads * self.head_dim * d + 3 * d * self.d_ff
+            n += self.num_layers * per
+        elif self.family == "moe":
+            attn = (self.num_heads + 2 * self.num_kv_heads) * self.head_dim * d \
+                + self.num_heads * self.head_dim * d
+            moe = self.num_experts * 3 * d * self.moe_d_ff + d * self.num_experts
+            dense = 3 * d * self.d_ff if self.dense_residual else 0
+            n += self.num_layers * (attn + moe + dense)
+        elif self.family in ("ssm", "hybrid"):
+            di, g, ns, h = self.d_inner, self.ssm_groups, self.ssm_state, self.ssm_heads
+            proj_in = d * (2 * di + 2 * g * ns + h)
+            per = proj_in + di * d + h * 2 + (di + 2 * g * ns) * self.conv_width
+            n += self.num_layers * per
+            if self.family == "hybrid" and self.attn_every:
+                blocks = 1  # weight-shared
+                attn = (self.num_heads + 2 * self.num_kv_heads) * self.head_dim * d \
+                    + self.num_heads * self.head_dim * d + 3 * d * self.d_ff
+                n += blocks * attn
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        attn = (self.num_heads + 2 * self.num_kv_heads) * self.head_dim * d \
+            + self.num_heads * self.head_dim * d
+        act_moe = self.experts_per_token * 3 * d * self.moe_d_ff \
+            + d * self.num_experts
+        dense = 3 * d * self.d_ff if self.dense_residual else 0
+        n = self.num_layers * (attn + act_moe + dense)
+        n += self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return n
+
+
+REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    # import side-effect: populate registry
+    import repro.configs  # noqa: F401
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch '{name}'; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def list_configs() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(REGISTRY)

@@ -1,0 +1,52 @@
+"""repro.core — the ArBB data-parallel programming model on JAX.
+
+Public surface mirrors the paper's vocabulary:
+
+    Dense, bind                      containers + host interop
+    add_reduce, section, repeat_row, repeat_col, replace_col, cat, ...
+    arbb_for, arbb_while, arbb_if, unrolled
+    call, capture, emap
+    ExecLevel, use_level             O2 / O3 / O4 runtime retargeting
+"""
+from repro.core.containers import (
+    Dense,
+    bind,
+    f32,
+    f64,
+    i32,
+    i64,
+    usize,
+    is_dense,
+    unwrap,
+    wrap,
+)
+from repro.core.ops import (
+    add_reduce,
+    max_reduce,
+    min_reduce,
+    mul_reduce,
+    section,
+    repeat,
+    repeat_row,
+    repeat_col,
+    replace_col,
+    replace_row,
+    cat,
+    shift,
+    gather,
+    dot,
+)
+from repro.core.control import arbb_for, arbb_while, arbb_if, unrolled
+from repro.core.closure import call, capture, emap, Closure, CallClosure
+from repro.core.execlevel import ExecLevel, ExecContext, use_level, current
+
+__all__ = [
+    "Dense", "bind", "f32", "f64", "i32", "i64", "usize", "is_dense",
+    "unwrap", "wrap",
+    "add_reduce", "max_reduce", "min_reduce", "mul_reduce", "section",
+    "repeat", "repeat_row", "repeat_col", "replace_col", "replace_row",
+    "cat", "shift", "gather", "dot",
+    "arbb_for", "arbb_while", "arbb_if", "unrolled",
+    "call", "capture", "emap", "Closure", "CallClosure",
+    "ExecLevel", "ExecContext", "use_level", "current",
+]

@@ -1,0 +1,224 @@
+"""ArBB-style dense containers on JAX.
+
+Paper §2: "The ArBB API uses standard C++ features like templates and operator
+overloading to create new parallel collection objects representing vectors and
+matrices."  ``Dense`` is the JAX realisation: an immutable, pytree-registered
+wrapper around a ``jax.Array`` that carries the ArBB operator vocabulary
+(element-wise arithmetic, ``row``/``col`` accessors, sections, reductions).
+
+The ArBB/C++ *two-space* model (containers live in "ArBB space", host arrays in
+"C++ space", connected by ``bind``) maps onto JAX's host/device split:
+
+    bind(A, host_array)   ->  Dense.bind(host_array)    (jax.device_put)
+    A.read_only_range()   ->  A.read()                  (jax.device_get)
+
+Unlike ArBB (mutable containers, assignment semantics) every operation here is
+functional and returns a new ``Dense`` — the idiomatic JAX translation; the
+mod2am/mod2as ports in :mod:`repro.numerics` show that the paper's programs
+survive this translation essentially line-for-line.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Dense",
+    "bind",
+    "f32",
+    "f64",
+    "i32",
+    "i64",
+    "usize",
+    "is_dense",
+    "unwrap",
+    "wrap",
+]
+
+# ArBB scalar type aliases (paper §3.1 lines 4-5: "ArBB defines special scalar
+# data types like i32, f32 or f64").
+f32 = jnp.float32
+f64 = jnp.float64
+i32 = jnp.int32
+i64 = jnp.int64
+usize = jnp.int32  # loop-index type; 32-bit is the JAX default index width.
+
+
+def unwrap(x: Any) -> Any:
+    """Return the underlying array of a Dense, or x unchanged."""
+    return x.data if isinstance(x, Dense) else x
+
+
+def wrap(x: Any) -> "Dense":
+    """Wrap an array-like into a Dense container."""
+    return x if isinstance(x, Dense) else Dense(jnp.asarray(x))
+
+
+def is_dense(x: Any) -> bool:
+    return isinstance(x, Dense)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    """An ArBB ``dense<T, D>`` container (D = 1..3) backed by a jax.Array.
+
+    Supports the paper's operator vocabulary via methods and the functions in
+    :mod:`repro.core.ops`.  Arithmetic broadcasts exactly like jnp (a superset
+    of ArBB's element-wise semantics).
+    """
+
+    data: jax.Array
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.data,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (data,) = children
+        return cls(data)
+
+    # -- construction / host interop (bind / read) --------------------------
+    @classmethod
+    def bind(cls, host_array: Any, *, dtype: Any = None) -> "Dense":
+        """ArBB ``bind()``: move a host ("C++ space") array into container
+        ("ArBB") space.  Paper §3.1 lines 19-21."""
+        arr = jnp.asarray(host_array, dtype=dtype)
+        return cls(arr)
+
+    @classmethod
+    def zeros(cls, shape: Sequence[int] | int, dtype: Any = f32) -> "Dense":
+        return cls(jnp.zeros(shape, dtype))
+
+    @classmethod
+    def full(cls, shape: Sequence[int] | int, value: Any, dtype: Any = f32) -> "Dense":
+        return cls(jnp.full(shape, value, dtype))
+
+    @classmethod
+    def arange(cls, n: int, dtype: Any = i32) -> "Dense":
+        return cls(jnp.arange(n, dtype=dtype))
+
+    def read(self) -> np.ndarray:
+        """ArBB ``read_only_range()``: synchronise and view in host space."""
+        return np.asarray(jax.device_get(self.data))
+
+    # -- shape protocol ------------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.data.shape)
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def ndim(self) -> int:
+        return self.data.ndim
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.data.shape)) if self.data.shape else 1
+
+    def __len__(self) -> int:
+        return self.data.shape[0]
+
+    # -- ArBB accessors ------------------------------------------------------
+    def row(self, i) -> "Dense":
+        """i-th row of a 2-D container (works with traced indices)."""
+        return Dense(jnp.take(self.data, unwrap(i), axis=0))
+
+    def col(self, j) -> "Dense":
+        """j-th column of a 2-D container (works with traced indices)."""
+        return Dense(jnp.take(self.data, unwrap(j), axis=1))
+
+    def __getitem__(self, idx) -> "Dense":
+        idx = jax.tree_util.tree_map(unwrap, idx)
+        return Dense(self.data[idx])
+
+    def set(self, idx, value) -> "Dense":
+        """Functional element write: ArBB ``c(i, j) = v`` becomes
+        ``c = c.set((i, j), v)``."""
+        idx = jax.tree_util.tree_map(unwrap, idx)
+        return Dense(self.data.at[idx].set(unwrap(value)))
+
+    def add_at(self, idx, value) -> "Dense":
+        idx = jax.tree_util.tree_map(unwrap, idx)
+        return Dense(self.data.at[idx].add(unwrap(value)))
+
+    def astype(self, dtype) -> "Dense":
+        return Dense(self.data.astype(dtype))
+
+    def reshape(self, *shape) -> "Dense":
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        return Dense(self.data.reshape(shape))
+
+    @property
+    def T(self) -> "Dense":
+        return Dense(self.data.T)
+
+    # -- element-wise arithmetic (ArBB operator overloading, paper §2) -------
+    def _binop(self, other, op) -> "Dense":
+        return Dense(op(self.data, unwrap(other)))
+
+    def _rbinop(self, other, op) -> "Dense":
+        return Dense(op(unwrap(other), self.data))
+
+    def __add__(self, o):
+        return self._binop(o, jnp.add)
+
+    def __radd__(self, o):
+        return self._rbinop(o, jnp.add)
+
+    def __sub__(self, o):
+        return self._binop(o, jnp.subtract)
+
+    def __rsub__(self, o):
+        return self._rbinop(o, jnp.subtract)
+
+    def __mul__(self, o):
+        return self._binop(o, jnp.multiply)
+
+    def __rmul__(self, o):
+        return self._rbinop(o, jnp.multiply)
+
+    def __truediv__(self, o):
+        return self._binop(o, jnp.divide)
+
+    def __rtruediv__(self, o):
+        return self._rbinop(o, jnp.divide)
+
+    def __pow__(self, o):
+        return self._binop(o, jnp.power)
+
+    def __neg__(self):
+        return Dense(-self.data)
+
+    def __matmul__(self, o):
+        return Dense(self.data @ unwrap(o))
+
+    # comparisons give boolean containers (used by _while conditions)
+    def __lt__(self, o):
+        return self._binop(o, jnp.less)
+
+    def __le__(self, o):
+        return self._binop(o, jnp.less_equal)
+
+    def __gt__(self, o):
+        return self._binop(o, jnp.greater)
+
+    def __ge__(self, o):
+        return self._binop(o, jnp.greater_equal)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Dense(shape={self.shape}, dtype={self.dtype})"
+
+
+def bind(host_array: Any, *, dtype: Any = None) -> Dense:
+    """Module-level ``bind`` mirroring the paper's free function."""
+    return Dense.bind(host_array, dtype=dtype)

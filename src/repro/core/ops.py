@@ -1,0 +1,184 @@
+"""ArBB operator vocabulary on Dense containers.
+
+Paper §2: "a wide variety of special operators for e.g. element-wise
+operations, vector-scalar operations, collectives and permutations are
+defined."  These are the ops the paper's four kernel ports actually use:
+
+    add_reduce      - sum-reduction (scalar or along an axis)    [mod2am, CG]
+    section         - strided sub-view                            [mod2as, FFT]
+    repeat_row/col  - broadcast a vector into a matrix            [mod2am]
+    replace_col/row - functional column/row update                [mod2am]
+    cat             - concatenation                               [FFT]
+    repeat          - tile a vector                               [FFT]
+
+plus a few conveniences (``max_reduce``, ``shift``, ``gather``) used by the
+numerics layer.  All take/return ``Dense`` (or plain arrays, transparently).
+Traced (dynamic) start indices are supported where ArBB supports them, via
+``lax.dynamic_slice``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.containers import Dense, unwrap, wrap
+
+__all__ = [
+    "add_reduce",
+    "max_reduce",
+    "min_reduce",
+    "mul_reduce",
+    "section",
+    "repeat",
+    "repeat_row",
+    "repeat_col",
+    "replace_col",
+    "replace_row",
+    "cat",
+    "shift",
+    "gather",
+    "dot",
+]
+
+
+def _is_static(x: Any) -> bool:
+    return isinstance(x, (int, float)) or (
+        hasattr(x, "aval") is False and not isinstance(x, jax.core.Tracer)
+    )
+
+
+def add_reduce(x, axis: int | None = None) -> Dense:
+    """ArBB ``add_reduce``.
+
+    With ``axis=None`` reduces to a scalar (paper §3.1 mxm0: ``add_reduce(
+    a.row(i) * b.col(j))``).  With an integer axis it reduces *along* that
+    direction, e.g. ``add_reduce(d, 0)`` reduces along rows producing a vector
+    of row-sums (paper's mxm1).  NOTE: ArBB's direction-0 reduction sums over
+    the *column index* (within each row); we match the paper's formula
+    ``v_m = sum_n d_mn`` i.e. axis 0 == reduce the last axis.
+    """
+    data = unwrap(x)
+    if axis is None:
+        return Dense(jnp.sum(data))
+    # ArBB direction d reduces along dimension counted from the fastest-moving
+    # index; for 2-D containers direction 0 is "along the row".
+    jax_axis = data.ndim - 1 - axis
+    return Dense(jnp.sum(data, axis=jax_axis))
+
+
+def max_reduce(x, axis: int | None = None) -> Dense:
+    data = unwrap(x)
+    if axis is None:
+        return Dense(jnp.max(data))
+    return Dense(jnp.max(data, axis=data.ndim - 1 - axis))
+
+
+def min_reduce(x, axis: int | None = None) -> Dense:
+    data = unwrap(x)
+    if axis is None:
+        return Dense(jnp.min(data))
+    return Dense(jnp.min(data, axis=data.ndim - 1 - axis))
+
+
+def mul_reduce(x, axis: int | None = None) -> Dense:
+    data = unwrap(x)
+    if axis is None:
+        return Dense(jnp.prod(data))
+    return Dense(jnp.prod(data, axis=data.ndim - 1 - axis))
+
+
+def section(x, start, length: int, stride: int = 1) -> Dense:
+    """ArBB ``section(v, start, length[, stride])``: strided 1-D sub-view.
+
+    Used by mod2as (``section(rowp, 0, nrows)``) and the FFT
+    (``section(data, 0, n/2, 2)`` = even elements).  ``length`` and ``stride``
+    must be static; ``start`` may be traced.
+    """
+    data = unwrap(x)
+    start_v = unwrap(start)
+    if isinstance(start_v, (int,)) and stride == 1:
+        return Dense(lax.slice_in_dim(data, start_v, start_v + length, axis=0))
+    if isinstance(start_v, int):
+        # lax.slice keeps strided sections gather-free (jnp's strided
+        # __getitem__ with a non-zero start lowers to gather) — the FFT's
+        # structural no-reordering claim depends on this.
+        limit = start_v + (length - 1) * stride + 1
+        return Dense(lax.slice(data, (start_v,) + (0,) * (data.ndim - 1),
+                               (limit,) + data.shape[1:],
+                               (stride,) + (1,) * (data.ndim - 1)))
+    # traced start
+    sliced = lax.dynamic_slice_in_dim(data, start_v, (length - 1) * stride + 1, axis=0)
+    if stride != 1:
+        sliced = lax.slice(sliced, (0,), (sliced.shape[0],), (stride,))
+    return Dense(sliced)
+
+
+def repeat(x, times: int) -> Dense:
+    """Tile a 1-D container ``times`` times (FFT twiddle repetition)."""
+    data = unwrap(x)
+    return Dense(jnp.tile(data, times))
+
+
+def repeat_row(v, n: int) -> Dense:
+    """Matrix whose *rows* are all copies of vector v: ``t_mn = v_n`` with m in
+    [0, n).  Paper mxm1: ``t = repeat_row(b.col(i), n)`` gives t_mn = b_ni."""
+    data = unwrap(v)
+    return Dense(jnp.broadcast_to(data[None, :], (n, data.shape[0])))
+
+
+def repeat_col(v, n: int) -> Dense:
+    """Matrix whose *columns* are all copies of vector v: ``t_mn = v_m``."""
+    data = unwrap(v)
+    return Dense(jnp.broadcast_to(data[:, None], (data.shape[0], n)))
+
+
+def replace_col(m, j, v) -> Dense:
+    """Functional update of column j (paper mxm1 line 7).  j may be traced."""
+    mdata, vdata = unwrap(m), unwrap(v)
+    jv = unwrap(j)
+    if isinstance(jv, int):
+        return Dense(mdata.at[:, jv].set(vdata))
+    return Dense(
+        lax.dynamic_update_slice(mdata, vdata[:, None], (jnp.int32(0), jv))
+    )
+
+
+def replace_row(m, i, v) -> Dense:
+    mdata, vdata = unwrap(m), unwrap(v)
+    iv = unwrap(i)
+    if isinstance(iv, int):
+        return Dense(mdata.at[iv, :].set(vdata))
+    return Dense(
+        lax.dynamic_update_slice(mdata, vdata[None, :], (iv, jnp.int32(0)))
+    )
+
+
+def cat(a, b, axis: int = 0) -> Dense:
+    """Concatenate two containers (FFT: ``data = cat(up, down)``)."""
+    return Dense(jnp.concatenate([unwrap(a), unwrap(b)], axis=axis))
+
+
+def shift(x, offset: int, fill=0) -> Dense:
+    """Shift a 1-D container by ``offset`` filling vacated slots (DIA SpMV)."""
+    data = unwrap(x)
+    n = data.shape[0]
+    rolled = jnp.roll(data, offset)
+    idx = jnp.arange(n)
+    if offset >= 0:
+        mask = idx >= offset
+    else:
+        mask = idx < n + offset
+    return Dense(jnp.where(mask, rolled, jnp.asarray(fill, data.dtype)))
+
+
+def gather(x, idx) -> Dense:
+    """Element gather ``x[idx]`` (mod2as: ``invec[indx[i]]``)."""
+    return Dense(jnp.take(unwrap(x), unwrap(idx), axis=0))
+
+
+def dot(a, b) -> Dense:
+    """Inner product of two vectors as add_reduce(a*b) — CG's BLAS-1 core."""
+    return add_reduce(wrap(a) * wrap(b))

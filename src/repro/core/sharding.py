@@ -1,0 +1,61 @@
+"""Container -> mesh sharding rules for the DSL execution levels.
+
+ArBB never exposes data placement — the runtime decides how containers are
+split across cores.  We keep that contract: when a ``call`` runs at O3/O4 the
+framework picks shardings from container rank and divisibility alone.  Models
+(which need precise layouts) bypass these heuristics with explicit
+PartitionSpecs; the heuristics exist so the *paper's* programs run unmodified
+at every level.
+
+Rules (first matching axis wins, axis must divide the dim):
+  1-D containers: shard dim 0 over the batch axes ('pod','data' flattened).
+  2-D containers: dim 0 over batch axes, dim 1 over 'model'.
+  3-D containers: dim 0 over batch axes, dim 2 over 'model'.
+  Anything that does not divide evenly stays replicated on that dim.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["auto_spec", "auto_sharding", "batch_axes", "replicated"]
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh: ('pod', 'data') when present."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def auto_spec(shape: Sequence[int], mesh: Mesh) -> P:
+    """Rank/divisibility-driven PartitionSpec for a DSL container."""
+    ndim = len(shape)
+    if ndim == 0:
+        return P()
+    parts: list = [None] * ndim
+    baxes = batch_axes(mesh)
+    if baxes and shape[0] % _axis_size(mesh, baxes) == 0 and shape[0] > 0:
+        parts[0] = baxes if len(baxes) > 1 else baxes[0]
+    if ndim >= 2 and "model" in mesh.axis_names:
+        mdim = ndim - 1 if ndim <= 2 else 2
+        if shape[mdim] % mesh.shape["model"] == 0 and shape[mdim] > 0:
+            parts[mdim] = "model"
+    return P(*parts)
+
+
+def auto_sharding(shape: Sequence[int], mesh: Optional[Mesh]) -> Optional[NamedSharding]:
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, auto_spec(shape, mesh))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

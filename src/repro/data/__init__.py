@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM, ByteCorpus, host_slice, prefetch
+
+__all__ = ["SyntheticLM", "ByteCorpus", "host_slice", "prefetch"]

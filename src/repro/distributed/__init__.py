@@ -1,0 +1,2 @@
+"""repro.distributed — sharding rules + collective helpers."""
+from repro.distributed import sharding  # noqa: F401

@@ -1,0 +1,10 @@
+"""repro.kernels — Pallas TPU kernels for the paper's compute hot-spots.
+
+    matmul.py           blocked MXU matmul          (mod2am)
+    spmv.py             block-ELL + DIA SpMV        (mod2as, TPU-adapted)
+    fft.py              split-stream butterfly stage (mod2f)
+    flash_attention.py  online-softmax attention    (beyond-paper, LM archs)
+    ops.py              jit'd wrappers + backend dispatch (pallas/interpret/xla)
+    ref.py              pure-jnp oracles
+"""
+from repro.kernels import ops, ref  # noqa: F401

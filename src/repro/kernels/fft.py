@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: split-stream FFT butterfly stage (mod2f, TPU-native).
+
+Hardware adaptation (DESIGN.md §2): the split-stream algorithm was designed
+for GPU stream processors — each stage reads the even/odd interleave and
+writes two contiguous halves, with no scatter.  On TPU we go one step further
+and make the even/odd split *structural*: the stage operates on the
+``(n/2, 2)`` view of the data, so
+
+    even = data[:, 0]        (a sublane column — no strided load)
+    odd  = data[:, 1]
+    out  = [up ; down]       (a (2, n/2) result = the cat(), free reshape)
+
+Complex arithmetic is explicit re/im (Mosaic has no native complex), so one
+stage = one fused VPU pass: 4 mul + 6 add per butterfly, twiddles resident in
+VMEM.  The grid tiles the n/2 butterflies; each tile's working set is
+6 * block * 4 B — block=65536 keeps it ≈1.5 MiB, well inside VMEM.
+
+The stage is applied log2(n) times by :func:`repro.kernels.ops.fft` with the
+bit-reversed twiddle table of :mod:`repro.numerics.fft` (prefix property ⇒ the
+same table serves every stage; stage s uses its first n/2^{s+1} entries tiled).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fft_stage_kernel", "fft_stage"]
+
+
+def fft_stage_kernel(dre_ref, dim_ref, twr_ref, twi_ref, ore_ref, oim_ref):
+    """One tile of butterflies: data (block, 2) re/im -> out (2, block) re/im."""
+    er = dre_ref[:, 0]
+    ei = dim_ref[:, 0]
+    orr = dre_ref[:, 1]
+    oi = dim_ref[:, 1]
+    twr = twr_ref[...]
+    twi = twi_ref[...]
+
+    # up = even + odd
+    ore_ref[0, :] = er + orr
+    oim_ref[0, :] = ei + oi
+    # down = (even - odd) * tw
+    dr = er - orr
+    di = ei - oi
+    ore_ref[1, :] = dr * twr - di * twi
+    oim_ref[1, :] = dr * twi + di * twr
+
+
+def fft_stage(
+    data_re: jax.Array,     # (n/2, 2): column 0 = even stream, 1 = odd
+    data_im: jax.Array,
+    tw_re: jax.Array,       # (n/2,) stage twiddles (already tiled)
+    tw_im: jax.Array,
+    *,
+    block: int = 65536,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Apply one split-stream stage.  Returns (out_re, out_im), each (2, n/2):
+    row 0 = up stream, row 1 = down stream; ``reshape(n)`` is the paper's
+    ``cat(up, down)``."""
+    half, two = data_re.shape
+    assert two == 2
+    block = min(block, half)
+    assert half % block == 0, (half, block)
+    grid = (half // block,)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((2, half), data_re.dtype),
+        jax.ShapeDtypeStruct((2, half), data_im.dtype),
+    ]
+    return pl.pallas_call(
+        fft_stage_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, 2), lambda c: (c, 0)),
+            pl.BlockSpec((block, 2), lambda c: (c, 0)),
+            pl.BlockSpec((block,), lambda c: (c,)),
+            pl.BlockSpec((block,), lambda c: (c,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((2, block), lambda c: (0, c)),
+            pl.BlockSpec((2, block), lambda c: (0, c)),
+        ],
+        out_shape=out_shape,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(data_re, data_im, tw_re, tw_im)

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: flash attention with GQA (beyond-paper optimisation).
+
+The paper's dense-linear-algebra dwarf (mod2am) dominates transformer
+compute; its attention instance is the one place where the naive formulation
+also *materialises* an O(L^2) intermediate.  This kernel applies the paper's
+central lesson — restructure the recorded loop so the compiler can tile it —
+in its strongest modern form: online-softmax tiling (Flash-Attention), K/V
+panels streamed through VMEM with an f32 running (m, l, acc) state.
+
+    grid = (batch, q_heads, Lq/bq, Lk/bk)        k panel innermost, sequential
+    q tile   (bq, d)   VMEM        kv tiles (bk, d) VMEM
+    scratch  m (bq,), l (bq,), acc (bq, d)  — f32, persists across k panels
+
+GQA is folded into the BlockSpec index maps: the K/V index map sends q-head h
+to kv-head h // (q_heads // kv_heads), so MQA (gemma-2b kv=1) and GQA
+(qwen3 kv=8) reuse K/V panels across the q-head grid axis with no extra copies.
+
+Causal masking is positional (iota compare) inside the kernel; fully-masked
+panels are skipped via ``pl.when`` on the grid coordinates, halving work for
+causal training shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, kv_steps: int, block_q: int, block_k: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Skip panels strictly above the diagonal when causal.
+    run = (not causal) or (ik * block_k <= (iq + 1) * block_q - 1)
+
+    @pl.when(run)
+    def _panel():
+        q = q_ref[0, 0]                                   # (bq, d)
+        k = k_ref[0, 0]                                   # (bk, d)
+        v = v_ref[0, 0]                                   # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ik == kv_steps - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,          # (batch, q_heads, seq_q, d)
+    k: jax.Array,          # (batch, kv_heads, seq_k, d)
+    v: jax.Array,          # (batch, kv_heads, seq_k, d)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    batch, q_heads, seq_q, d = q.shape
+    _, kv_heads, seq_k, _ = k.shape
+    assert q_heads % kv_heads == 0
+    group = q_heads // kv_heads
+    block_q = min(block_q, seq_q)
+    block_k = min(block_k, seq_k)
+    assert seq_q % block_q == 0 and seq_k % block_k == 0
+    scale = scale if scale is not None else d ** -0.5
+    grid = (batch, q_heads, seq_q // block_q, seq_k // block_k)
+
+    kernel = functools.partial(
+        flash_attention_kernel, scale=scale, causal=causal,
+        kv_steps=grid[3], block_q=block_q, block_k=block_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

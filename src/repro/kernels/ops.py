@@ -1,0 +1,176 @@
+"""jit'd public entry points for the Pallas kernels, with backend dispatch.
+
+Backend policy (``repro.kernels.ops.backend`` context / ``REPRO_KERNELS`` env):
+
+    'pallas'     pl.pallas_call compiled for TPU (production)
+    'interpret'  pl.pallas_call(interpret=True) — kernel body executed on CPU,
+                 used by the test suite to validate kernels in this container
+    'xla'        the pure-jnp reference path (repro.kernels.ref) — what the
+                 multi-pod dry-run lowers, so cost_analysis reflects the XLA
+                 collectives/fusions rather than opaque custom-calls
+
+Default: 'pallas' on TPU, 'xla' elsewhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fft as fft_k
+from repro.kernels import flash_attention as fa_k
+from repro.kernels import matmul as mm_k
+from repro.kernels import ref
+from repro.kernels import spmv as spmv_k
+from repro.numerics.fft import bitrev_permutation, split_stream_twiddles
+
+__all__ = ["backend", "current_backend", "matmul", "spmv_ell", "spmv_dia",
+           "fft", "flash_attention"]
+
+_state = threading.local()
+
+
+def _default_backend() -> str:
+    env = os.environ.get("REPRO_KERNELS")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def current_backend() -> str:
+    return getattr(_state, "backend", None) or _default_backend()
+
+
+@contextlib.contextmanager
+def backend(name: str):
+    assert name in ("pallas", "interpret", "xla"), name
+    prev = getattr(_state, "backend", None)
+    _state.backend = name
+    try:
+        yield
+    finally:
+        _state.backend = prev
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "kernel_backend"))
+def _matmul_impl(a, b, block_m, block_n, block_k, kernel_backend):
+    if kernel_backend == "xla":
+        return ref.matmul_ref(a, b)
+    m, k = a.shape
+    _, n = b.shape
+    mp, kp, np_ = _round_up(m, block_m), _round_up(k, block_k), _round_up(n, block_n)
+    ap = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    bp = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    out = mm_k.matmul(ap, bp, block_m=block_m, block_n=block_n,
+                      block_k=block_k, interpret=(kernel_backend == "interpret"))
+    return out[:m, :n]
+
+
+def matmul(a, b, *, block_m=128, block_n=128, block_k=128):
+    """Blocked matmul (pads to block multiples; f32 accumulation)."""
+    return _matmul_impl(a, b, block_m, block_n, block_k, current_backend())
+
+
+# ---------------------------------------------------------------------------
+# SpMV
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("kernel_backend",))
+def _spmv_ell_impl(values, cols, x, kernel_backend):
+    if kernel_backend == "xla":
+        return ref.spmv_ell_ref(values, cols, x)
+    nrows, width = values.shape
+    br, bw = 8, 128
+    nr, wp = _round_up(nrows, br), _round_up(width, bw)
+    vp = jnp.pad(values, ((0, nr - nrows), (0, wp - width)))
+    cp = jnp.pad(cols, ((0, nr - nrows), (0, wp - width)))
+    out = spmv_k.spmv_ell(vp, cp, x, interpret=(kernel_backend == "interpret"))
+    return out[:nrows]
+
+
+def spmv_ell(values, cols, x):
+    return _spmv_ell_impl(values, cols, x, current_backend())
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "kernel_backend"))
+def _spmv_dia_impl(diags, offsets, x, kernel_backend):
+    if kernel_backend == "xla":
+        return ref.spmv_dia_ref(diags, offsets, x)
+    return spmv_k.spmv_dia(diags, offsets, x,
+                           interpret=(kernel_backend == "interpret"))
+
+
+def spmv_dia(diags, offsets, x):
+    return _spmv_dia_impl(diags, tuple(offsets), x, current_backend())
+
+
+# ---------------------------------------------------------------------------
+# FFT (full transform = tangle + log2(n) fused stage kernels)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("kernel_backend",))
+def _fft_impl(x, kernel_backend):
+    n = x.shape[0]
+    x = x.astype(jnp.complex64) if x.dtype != jnp.complex128 else x
+    if kernel_backend == "xla":
+        return ref.fft_ref(x)
+    rdtype = jnp.float64 if x.dtype == jnp.complex128 else jnp.float32
+    perm = bitrev_permutation(n)
+    tw = split_stream_twiddles(n)
+    tw_re = jnp.asarray(tw.real, rdtype)
+    tw_im = jnp.asarray(tw.imag, rdtype)
+    data = x[perm]
+    re, im = jnp.real(data).astype(rdtype), jnp.imag(data).astype(rdtype)
+    m, i = n // 2, 1
+    interp = kernel_backend == "interpret"
+    while i < n:
+        stage_tw_re = jnp.tile(tw_re[:m], i)
+        stage_tw_im = jnp.tile(tw_im[:m], i)
+        ore, oim = fft_k.fft_stage(re.reshape(n // 2, 2), im.reshape(n // 2, 2),
+                                   stage_tw_re, stage_tw_im, interpret=interp)
+        re, im = ore.reshape(n), oim.reshape(n)
+        m >>= 1
+        i <<= 1
+    return (re + 1j * im).astype(x.dtype)
+
+
+def fft(x):
+    """1-D complex FFT, split-stream stages (power-of-two length)."""
+    return _fft_impl(x, current_backend())
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "kernel_backend"))
+def _attn_impl(q, k, v, causal, block_q, block_k, kernel_backend):
+    if kernel_backend == "xla":
+        # long sequences: stream over KV blocks (flash schedule at the XLA
+        # level) instead of materialising (B, H, Lq, Lk) scores — §Perf
+        # iteration 2; short sequences keep the transparent oracle
+        if k.shape[2] >= 4096 and k.shape[2] % 1024 == 0:
+            return ref.attention_chunked(q, k, v, causal=causal,
+                                         block_kv=1024)
+        return ref.attention_ref(q, k, v, causal=causal)
+    return fa_k.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                                block_k=block_k,
+                                interpret=(kernel_backend == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
+    return _attn_impl(q, k, v, causal, block_q, block_k, current_backend())

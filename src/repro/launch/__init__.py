@@ -1,0 +1,10 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` sets ``xla_force_host_platform_device_count``
+at import — import it only in a fresh process (it is a __main__ module).
+"""
+from repro.launch.mesh import make_production_mesh, make_mesh, describe
+from repro.launch.shapes import SHAPES, ShapeSpec, applicable, cells
+
+__all__ = ["make_production_mesh", "make_mesh", "describe", "SHAPES",
+           "ShapeSpec", "applicable", "cells"]

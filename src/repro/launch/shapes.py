@@ -1,0 +1,53 @@
+"""Assigned input-shape sets + applicability rules (DESIGN.md §5).
+
+Every (arch × shape) cell is well-defined by the assignment:
+
+    train_4k      seq_len=4096    global_batch=256   -> train_step
+    prefill_32k   seq_len=32768   global_batch=32    -> prefill_step
+    decode_32k    seq_len=32768   global_batch=128   -> serve_step
+    long_500k     seq_len=524288  global_batch=1     -> serve_step
+                  (sub-quadratic archs only: ssm / hybrid)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "applicable", "cells"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runnable?, reason-if-not).  long_500k needs sub-quadratic mixing."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: O(L^2) attention at "
+                       "L=524288 has no sub-quadratic mechanism (DESIGN.md "
+                       "§5 long_500k skips)")
+    return True, ""
+
+
+def cells(configs: list[ModelConfig]) -> list[tuple[ModelConfig, ShapeSpec]]:
+    """All assigned (arch × shape) cells, runnable ones only."""
+    out = []
+    for cfg in configs:
+        for shape in SHAPES.values():
+            ok, _ = applicable(cfg, shape)
+            if ok:
+                out.append((cfg, shape))
+    return out

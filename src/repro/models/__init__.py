@@ -1,0 +1,2 @@
+"""repro.models — model zoo for the 10 assigned architectures."""
+from repro.models.lm import LM, cross_entropy_loss  # noqa: F401

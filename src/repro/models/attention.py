@@ -1,0 +1,113 @@
+"""GQA attention: training path (flash kernel / XLA ref) + KV-cache decode.
+
+GQA/MQA (kv_heads <= num_heads) covers every assigned attention arch:
+qwen3 (16/8), gemma-2b (8/1 MQA), phi3 & minicpm & zamba2 (MHA),
+qwen2-vl (64/8), musicgen (24/24), qwen3-moe (32/4), arctic (56/8).
+
+qk_norm (qwen3): RMS-normalise q and k per head before RoPE.
+M-RoPE (qwen2-vl): 3-stream rotary, sections split head_dim/2.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.layers import (apply_rope, dense_init, linear, rms_norm,
+                                 rms_norm_init, rope)
+
+Params = dict[str, Any]
+
+__all__ = ["attention_init", "attention_apply", "attention_decode"]
+
+
+def attention_init(key, cfg) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, hk, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(kq, (d, h * hd), dtype=cfg.param_dtype),
+        "wk": dense_init(kk, (d, hk * hd), dtype=cfg.param_dtype),
+        "wv": dense_init(kv, (d, hk * hd), dtype=cfg.param_dtype),
+        "wo": dense_init(ko, (h * hd, d), dtype=cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rms_norm_init(hd, cfg.param_dtype)
+        p["k_norm"] = rms_norm_init(hd, cfg.param_dtype)
+    return p
+
+
+def _project_qkv(x, p, cfg):
+    B, L, _ = x.shape
+    h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = linear(x, p["wq"].astype(x.dtype)).reshape(B, L, h, hd)
+    k = linear(x, p["wk"].astype(x.dtype)).reshape(B, L, hk, hd)
+    v = linear(x, p["wv"].astype(x.dtype)).reshape(B, L, hk, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def _rope_qk(q, k, cos, sin, cfg):
+    # (B, L, H, D) -> (B, H, L, D)
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3)
+    sections = cfg.mrope_sections if cfg.m_rope else None
+    q = apply_rope(q, cos, sin, sections)
+    k = apply_rope(k, cos, sin, sections)
+    return q, k
+
+
+def attention_apply(x: jax.Array, p: Params, cfg, cos, sin) -> jax.Array:
+    """Full-sequence causal attention (training / prefill)."""
+    out, _, _ = attention_apply_kv(x, p, cfg, cos, sin)
+    return out
+
+
+def attention_apply_kv(x: jax.Array, p: Params, cfg, cos, sin
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Like :func:`attention_apply` but also returns the rope-applied K/V in
+    cache layout (B, hk, L, hd) — the prefill path of the serving engine."""
+    B, L, _ = x.shape
+    q, k, v = _project_qkv(x, p, cfg)
+    q, k = _rope_qk(q, k, cos, sin, cfg)
+    v = v.transpose(0, 2, 1, 3)
+    out = kops.flash_attention(q, k, v, causal=True)      # (B, H, L, D)
+    out = out.transpose(0, 2, 1, 3).reshape(B, L, cfg.num_heads * cfg.head_dim)
+    return linear(out, p["wo"].astype(x.dtype)), k, v
+
+
+def attention_decode(
+    x: jax.Array,              # (B, 1, d)
+    p: Params,
+    cfg,
+    cache_k: jax.Array,        # (B, hk, S_max, hd)
+    cache_v: jax.Array,
+    cur_len: jax.Array,        # scalar int32: tokens already in cache
+    cos, sin,                  # rope at position cur_len: (B, 1, hd/2) [or (3,B,1,·)]
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode with KV cache; returns (out, new_k, new_v)."""
+    B = x.shape[0]
+    h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _project_qkv(x, p, cfg)                     # (B, 1, ·, hd)
+    q, k = _rope_qk(q, k, cos, sin, cfg)                  # (B, ·, 1, hd)
+    v = v.transpose(0, 2, 1, 3)
+
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), cur_len, axis=2)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), cur_len, axis=2)
+
+    S = cache_k.shape[2]
+    group = h // hk
+    qg = q.reshape(B, hk, group, hd)                      # (B, hk, g, hd)  L=1
+    s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                   cache_k.astype(jnp.float32)) * (hd ** -0.5)
+    mask = jnp.arange(S) <= cur_len                       # include current token
+    s = jnp.where(mask[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", w, cache_v.astype(jnp.float32))
+    o = o.reshape(B, 1, h * hd).astype(x.dtype)
+    return linear(o, p["wo"].astype(x.dtype)), cache_k, cache_v

@@ -1,0 +1,138 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, initialisers.
+
+Everything is a pure function over explicit parameter pytrees (dicts) — no
+module framework, so `jax.eval_shape` / pjit / scan treat parameters
+uniformly, which the multi-pod dry-run depends on.
+
+dtype policy: parameters are stored in ``cfg.param_dtype`` (f32 for small
+models, bf16 for the giants), activations in ``cfg.dtype`` (bf16), reductions
+(norm variance, softmax, rope trig) in f32.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rms_norm_init", "rope", "mrope_positions",
+           "apply_rope", "mlp", "mlp_init", "dense_init", "linear"]
+
+Params = dict[str, Any]
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (the LM standard)."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# Cross-shard reduction dtype for TP-sharded dots.  None = f32 partials
+# (safe everywhere).  jnp.bfloat16 halves the row-parallel all-reduce bytes:
+# on TPU the MXU accumulates f32 *inside* each shard regardless, so only the
+# cross-shard sum (model-axis width 16 terms) rounds at bf16 — standard
+# Megatron practice.  The distributed launchers/probes enable it; CPU unit
+# tests keep f32 (a CPU dot would truly accumulate at the output dtype).
+REDUCE_DTYPE = None
+
+
+def linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x @ w with f32 accumulation on the MXU."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=REDUCE_DTYPE or jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rms_norm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(x: jax.Array, p: Params, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + qwen2-vl's M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """(..., L) int positions -> cos/sin of shape (..., L, head_dim/2), f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def mrope_positions(seq_len: int, frontend_len: int, grid_hw: int) -> jax.Array:
+    """M-RoPE (qwen2-vl): 3 position streams (temporal, height, width).
+
+    Patch positions (first ``frontend_len`` slots): t = 0, (h, w) from a
+    square ``grid_hw`` raster.  Text positions: all three streams advance
+    together, offset past the visual block.  Returns (3, seq_len) int32.
+    """
+    idx = jnp.arange(seq_len, dtype=jnp.int32)
+    vis = idx < frontend_len
+    h = jnp.where(vis, idx // grid_hw, 0)
+    w = jnp.where(vis, idx % grid_hw, 0)
+    t = jnp.zeros_like(idx)
+    text_pos = jnp.maximum(idx - frontend_len, 0) + (frontend_len // max(grid_hw, 1))
+    return jnp.stack([
+        jnp.where(vis, t, text_pos),
+        jnp.where(vis, h, text_pos),
+        jnp.where(vis, w, text_pos),
+    ])
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               mrope_sections: tuple[int, ...] | None = None) -> jax.Array:
+    """Rotate pairs.  x: (B, H, L, D).  cos/sin: (B, L, D/2) or (3, B, L, D/2)
+    for M-RoPE, where ``mrope_sections`` splits D/2 across the 3 streams."""
+    if mrope_sections is not None:
+        # stitch per-stream cos/sin along the feature dim
+        parts_c, parts_s = [], []
+        off = 0
+        for s, sec in enumerate(mrope_sections):
+            parts_c.append(cos[s, ..., off:off + sec])
+            parts_s.append(sin[s, ..., off:off + sec])
+            off += sec
+        cos = jnp.concatenate(parts_c, axis=-1)
+        sin = jnp.concatenate(parts_s, axis=-1)
+    cos = cos[:, None, :, :]                       # (B, 1, L, D/2)
+    sin = sin[:, None, :, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLPs (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "wi_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "wo": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp(x: jax.Array, p: Params, kind: str = "swiglu") -> jax.Array:
+    gate = linear(x, p["wi_gate"].astype(x.dtype))
+    up = linear(x, p["wi_up"].astype(x.dtype))
+    if kind == "swiglu":
+        act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    elif kind == "geglu":
+        act = jax.nn.gelu(gate.astype(jnp.float32), approximate=True).astype(x.dtype)
+    else:
+        raise ValueError(kind)
+    return linear(act * up, p["wo"].astype(x.dtype))

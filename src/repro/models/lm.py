@@ -1,0 +1,538 @@
+"""LM: the architecture facade — init / train forward / decode, per family.
+
+One class covers all 10 assigned archs; the config's ``family`` selects block
+types and cache kinds.  Everything is pure functions over parameter pytrees,
+so ``jax.eval_shape`` gives abstract params for the dry-run and ``jax.jit``
+lowers train/serve steps directly.
+
+Inputs (see also repro.launch.dryrun.input_specs):
+    tokens   (B, S_tok)  int32
+    labels   (B, S_tok)  int32
+    frontend_embeds (B, F, d)  — vlm/audio stub frontends only (precomputed
+                                  patch/frame embeddings; F + S_tok = seq_len)
+
+Decode caches:
+    attention: per-layer K/V (layers, B, kv_heads, S_max, head_dim)
+    ssm:       conv shift register + (B, H, P, N) state per layer
+    hybrid:    both (mamba states for every layer, K/V per shared-block site)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tf
+from repro.models.layers import dense_init, linear, mrope_positions, rms_norm, \
+    rms_norm_init, rope
+
+Params = dict[str, Any]
+
+__all__ = ["LM", "cross_entropy_loss"]
+
+
+def _scan_or_unroll(body, init, xs, use_scan: bool):
+    """lax.scan, or a trace-time unrolled loop when cfg.scan_layers=False
+    (the depth-corrected roofline probes need per-layer costs visible in
+    the HLO).  Same (carry, stacked_ys) contract as lax.scan."""
+    if use_scan:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _maybe_scan(body, init, xs, use_scan: bool):
+    return _scan_or_unroll(body, init, xs, use_scan)[0]
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       ignore_index: int = -1) -> tuple[jax.Array, jax.Array]:
+    """Token-mean CE in f32; returns (loss, n_tokens)."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels != ignore_index)
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    n = jnp.maximum(jnp.sum(mask), 1)
+    return jnp.sum(nll) / n, n
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ke, ku, kl, ks = jax.random.split(key, 4)
+        # fan-in scale: tied unembed then yields O(1) logits (CE starts at
+        # ~ln V); the first block's rms_norm renormalises activations, and
+        # gemma's scale_embeddings restores O(1) lookups where configured.
+        p: Params = {
+            "embed": dense_init(ke, (cfg.padded_vocab, cfg.d_model),
+                                scale=cfg.d_model ** -0.5, dtype=cfg.pdtype),
+            "final_norm": rms_norm_init(cfg.d_model, cfg.pdtype),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = dense_init(ku, (cfg.d_model, cfg.padded_vocab),
+                                      dtype=cfg.pdtype)
+        fam = cfg.family
+        if fam in ("dense", "vlm", "audio"):
+            p["layers"] = tf.stack_init(kl, cfg, tf.dense_block_init,
+                                        cfg.num_layers)
+        elif fam == "moe":
+            p["layers"] = tf.stack_init(kl, cfg, tf.moe_block_init,
+                                        cfg.num_layers)
+        elif fam == "ssm":
+            p["layers"] = tf.stack_init(kl, cfg, tf.mamba_block_init,
+                                        cfg.num_layers)
+        elif fam == "hybrid":
+            ngroups, tail = self._hybrid_split()
+            if ngroups:
+                kg, kt = jax.random.split(kl)
+                group_keys = jax.random.split(kg, ngroups * cfg.attn_every)
+                stacked = jax.vmap(lambda k: tf.mamba_block_init(k, cfg))(
+                    group_keys)
+                p["groups"] = jax.tree_util.tree_map(
+                    lambda a: a.reshape(ngroups, cfg.attn_every, *a.shape[1:]),
+                    stacked)
+            else:
+                kt = kl
+            if tail:
+                p["tail"] = tf.stack_init(kt, cfg, tf.mamba_block_init, tail)
+            p["shared_attn"] = tf.dense_block_init(ks, cfg)
+        else:
+            raise ValueError(fam)
+        return p
+
+    def _hybrid_split(self) -> tuple[int, int]:
+        """(full groups of attn_every mamba layers + shared attn, tail mambas)."""
+        cfg = self.cfg
+        ngroups = cfg.num_layers // cfg.attn_every
+        tail = cfg.num_layers - ngroups * cfg.attn_every
+        return ngroups, tail
+
+    # ------------------------------------------------------------------
+    # embedding / positions
+    # ------------------------------------------------------------------
+    def _embed(self, params, tokens, frontend_embeds):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+        if cfg.frontend is not None:
+            assert frontend_embeds is not None, (
+                f"{cfg.name} requires frontend_embeds (stub modality input)")
+            x = jnp.concatenate(
+                [frontend_embeds.astype(cfg.act_dtype), x], axis=1)
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.act_dtype)
+        return constrain(x, "batch", None, "model")
+
+    def _logits(self, params: Params, x: jax.Array) -> jax.Array:
+        """Unembed (tied or not), slice off vocab padding, softcap."""
+        cfg = self.cfg
+        w_out = params.get("unembed")
+        if w_out is None:
+            w_out = params["embed"].T
+        logits = linear(x, w_out.astype(x.dtype))
+        if cfg.padded_vocab != cfg.vocab_size:
+            logits = logits[..., :cfg.vocab_size]
+        if cfg.logit_softcap:
+            c = cfg.logit_softcap
+            logits = jnp.tanh(logits.astype(jnp.float32) / c) * c
+        return logits
+
+    def _rope_tables(self, batch: int, seq_len: int, positions=None):
+        cfg = self.cfg
+        if not cfg.has_attention:
+            return None, None
+        if cfg.m_rope:
+            if positions is None:
+                pos = mrope_positions(seq_len, cfg.frontend_len, cfg.grid_hw)
+                pos = jnp.broadcast_to(pos[:, None, :], (3, batch, seq_len))
+            else:
+                pos = positions                       # (3, B, L)
+            cos, sin = rope(pos, cfg.head_dim, cfg.rope_theta)
+            return cos, sin                           # (3, B, L, hd/2)
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32),
+                                         (batch, seq_len))
+        return rope(positions, cfg.head_dim, cfg.rope_theta)
+
+    # ------------------------------------------------------------------
+    # training / prefill forward
+    # ------------------------------------------------------------------
+    def forward(self, params: Params, tokens: jax.Array,
+                frontend_embeds: Optional[jax.Array] = None
+                ) -> tuple[jax.Array, dict]:
+        """Full-sequence forward -> (logits (B, S, V), aux)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, frontend_embeds)
+        B, S, _ = x.shape
+        cos, sin = self._rope_tables(B, S)
+        fam = cfg.family
+
+        if fam in ("dense", "vlm", "audio"):
+            block = functools.partial(_dense_block_fn, cfg=cfg, cos=cos, sin=sin)
+            x, aux = tf.stack_apply(x, params["layers"], block, cfg)
+        elif fam == "moe":
+            block = functools.partial(_moe_block_fn, cfg=cfg, cos=cos, sin=sin)
+            x, aux = tf.stack_apply(x, params["layers"], block, cfg)
+        elif fam == "ssm":
+            block = functools.partial(_mamba_block_fn, cfg=cfg)
+            x, aux = tf.stack_apply(x, params["layers"], block, cfg)
+        elif fam == "hybrid":
+            x, aux = self._hybrid_forward(params, x, cos, sin)
+        else:
+            raise ValueError(fam)
+
+        x = rms_norm(x, params["final_norm"])
+        logits = self._logits(params, x)
+        logits = constrain(logits, "batch", None, "model")
+        return logits, aux
+
+    def _hybrid_forward(self, params, x, cos, sin):
+        cfg = self.cfg
+        aux = tf.zero_aux()
+        shared = params["shared_attn"]
+        mamba_fn = functools.partial(_mamba_block_fn, cfg=cfg)
+        attn_fn = functools.partial(_dense_block_fn, cfg=cfg, cos=cos, sin=sin)
+        if cfg.remat:
+            mamba_fn = jax.checkpoint(mamba_fn, policy=tf.REMAT_POLICY)
+            attn_fn = jax.checkpoint(attn_fn, policy=tf.REMAT_POLICY)
+
+        if "groups" in params:
+            def group_body(carry, gparams):
+                h, aux = carry
+                def inner(c, lp):
+                    h2, a2 = mamba_fn(c[0], lp)
+                    return (h2, jax.tree_util.tree_map(jnp.add, c[1], a2)), None
+                (h, aux) = _maybe_scan(inner, (h, aux), gparams,
+                                       cfg.scan_layers)
+                h, a2 = attn_fn(h, shared)      # weight-shared block
+                aux = jax.tree_util.tree_map(jnp.add, aux, a2)
+                return (h, aux), None
+
+            (x, aux) = _maybe_scan(group_body, (x, aux), params["groups"],
+                                   cfg.scan_layers)
+        if "tail" in params:
+            def tail_body(carry, lp):
+                h, aux = carry
+                h, a2 = mamba_fn(h, lp)
+                return (h, jax.tree_util.tree_map(jnp.add, aux, a2)), None
+            (x, aux) = _maybe_scan(tail_body, (x, aux), params["tail"],
+                                   cfg.scan_layers)
+        return x, aux
+
+    def loss(self, params: Params, batch: dict) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch["tokens"],
+                                   batch.get("frontend_embeds"))
+        labels = batch["labels"]
+        if cfg.frontend is not None:
+            # frontend positions don't predict tokens: drop their logits
+            logits = logits[:, cfg.frontend_len:, :]
+        loss, n = cross_entropy_loss(logits, labels)
+        metrics = {"loss": loss, "tokens": n}
+        if cfg.family == "moe":
+            loss = loss + 0.01 * aux["aux_lb"] / cfg.num_layers \
+                + 1e-3 * aux["aux_z"] / cfg.num_layers
+            metrics["aux_lb"] = aux["aux_lb"]
+        return loss, metrics
+
+    # ------------------------------------------------------------------
+    # prefill (serving: full-sequence forward that populates the cache)
+    # ------------------------------------------------------------------
+    def prefill(self, params: Params, tokens: jax.Array,
+                frontend_embeds: Optional[jax.Array] = None,
+                max_len: Optional[int] = None
+                ) -> tuple[jax.Array, Params]:
+        """Process the prompt; returns (last-position logits (B, V), cache).
+
+        ``max_len`` pads the KV cache past the prompt for subsequent decode
+        steps (defaults to the prompt length — the dry-run's prefill cell).
+        """
+        cfg = self.cfg
+        x = self._embed(params, tokens, frontend_embeds)
+        B, S, _ = x.shape
+        max_len = max(max_len or S, S)   # S includes frontend positions
+        cos, sin = self._rope_tables(B, S)
+        fam = cfg.family
+        cache: Params = {"cur_len": jnp.full((), S, jnp.int32)}
+
+        def pad_kv(kv):  # (layers, B, hk, S, hd) -> (..., max_len, ...)
+            if max_len == S:
+                return kv
+            return jnp.pad(kv, ((0, 0), (0, 0), (0, 0), (0, max_len - S),
+                                (0, 0)))
+
+        if fam in ("dense", "vlm", "audio", "moe"):
+            block_kv = tf.moe_block_kv if fam == "moe" else tf.dense_block_kv
+            block = functools.partial(block_kv, cfg=cfg, cos=cos, sin=sin)
+            x, (k, v) = tf.stack_apply_extras(x, params["layers"], block, cfg)
+            cache["k"], cache["v"] = pad_kv(k), pad_kv(v)
+        elif fam == "ssm":
+            block = functools.partial(tf.mamba_block_state, cfg=cfg)
+            x, states = tf.stack_apply_extras(x, params["layers"], block, cfg)
+            cache["ssm"] = states
+        elif fam == "hybrid":
+            x, cache = self._hybrid_prefill(params, x, cos, sin, cache,
+                                            max_len)
+        else:
+            raise ValueError(fam)
+
+        x = rms_norm(x, params["final_norm"])
+        logits = self._logits(params, x[:, -1:, :])[:, 0, :]
+        return logits, cache
+
+    def _hybrid_prefill(self, params, x, cos, sin, cache, max_len):
+        cfg = self.cfg
+        shared = params["shared_attn"]
+        mamba_fn = functools.partial(tf.mamba_block_state, cfg=cfg)
+        if cfg.remat:
+            mamba_fn = jax.checkpoint(mamba_fn, policy=tf.REMAT_POLICY)
+        flat_states = None
+
+        if "groups" in params:
+            def group_body(h, gparams):
+                h, gstates = tf.stack_apply_extras(
+                    h, gparams, lambda a, lp: mamba_fn(a, lp), cfg,
+                    remat=False)
+                a, k, v = attn_mod.attention_apply_kv(
+                    rms_norm(h, shared["attn_norm"]), shared["attn"], cfg,
+                    cos, sin)
+                h = h + a
+                from repro.models.layers import mlp
+                h = h + mlp(rms_norm(h, shared["mlp_norm"]), shared["mlp"],
+                            cfg.mlp_kind)
+                return h, (gstates, k, v)
+
+            x, (gstates, k, v) = _scan_or_unroll(group_body, x,
+                                                 params["groups"],
+                                                 cfg.scan_layers)
+            S = k.shape[3]
+            if max_len != S:
+                pad = ((0, 0), (0, 0), (0, 0), (0, max_len - S), (0, 0))
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+            cache["k"], cache["v"] = k, v
+            flat_states = jax.tree_util.tree_map(
+                lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]),
+                gstates)
+        if "tail" in params:
+            x, tstates = tf.stack_apply_extras(
+                x, params["tail"], lambda a, lp: mamba_fn(a, lp), cfg,
+                remat=False)
+            if flat_states is not None:
+                flat_states = jax.tree_util.tree_map(
+                    lambda a, b: jnp.concatenate([a, b], axis=0),
+                    flat_states, tstates)
+            else:
+                flat_states = tstates
+        cache["ssm"] = flat_states
+        return x, cache
+
+    # ------------------------------------------------------------------
+    # decode (serving)
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=None) -> Params:
+        cfg = self.cfg
+        dtype = dtype or cfg.act_dtype
+        fam = cfg.family
+        cache: Params = {"cur_len": jnp.zeros((), jnp.int32)}
+        if fam in ("dense", "vlm", "audio", "moe"):
+            shape = (cfg.num_layers, batch, cfg.num_kv_heads, max_len,
+                     cfg.head_dim)
+            cache["k"] = jnp.zeros(shape, dtype)
+            cache["v"] = jnp.zeros(shape, dtype)
+        elif fam == "ssm":
+            states = [ssm_mod.mamba2_state_init(cfg, batch, dtype)
+                      for _ in range(cfg.num_layers)]
+            cache["ssm"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *states)
+        elif fam == "hybrid":
+            ngroups, tail = self._hybrid_split()
+            states = [ssm_mod.mamba2_state_init(cfg, batch, dtype)
+                      for _ in range(cfg.num_layers)]
+            cache["ssm"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *states)
+            shape = (max(ngroups, 1), batch, cfg.num_kv_heads, max_len,
+                     cfg.head_dim)
+            cache["k"] = jnp.zeros(shape, dtype)
+            cache["v"] = jnp.zeros(shape, dtype)
+        return cache
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array
+                    ) -> tuple[jax.Array, Params]:
+        """tokens (B, 1) -> logits (B, V); advances the cache by one."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        cur = cache["cur_len"]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.act_dtype)
+
+        pos = jnp.broadcast_to(cur[None, None], (B, 1)).astype(jnp.int32)
+        if cfg.m_rope:
+            # cur counts frontend slots; text streams advance from the
+            # visual-block offset (matches mrope_positions in the forward)
+            text_pos = (pos - cfg.frontend_len
+                        + cfg.frontend_len // max(cfg.grid_hw, 1))
+            pos3 = jnp.broadcast_to(text_pos[None], (3, B, 1))
+            cos, sin = rope(pos3, cfg.head_dim, cfg.rope_theta)
+        elif cfg.has_attention:
+            cos, sin = rope(pos, cfg.head_dim, cfg.rope_theta)
+        else:
+            cos = sin = None
+
+        fam = cfg.family
+        new_cache = dict(cache)
+        if fam in ("dense", "vlm", "audio", "moe"):
+            x, new_cache["k"], new_cache["v"] = self._attn_decode_stack(
+                params, x, cache["k"], cache["v"], cur, cos, sin, cfg)
+        elif fam == "ssm":
+            x, new_cache["ssm"] = self._ssm_decode_stack(
+                params["layers"], x, cache["ssm"], cfg)
+        elif fam == "hybrid":
+            x, new_cache = self._hybrid_decode(params, x, cache, cur, cos, sin)
+
+        x = rms_norm(x, params["final_norm"])
+        logits = self._logits(params, x)[:, 0, :]
+        new_cache["cur_len"] = cur + 1
+        return logits, new_cache
+
+    def _attn_decode_stack(self, params, x, ck, cv, cur, cos, sin, cfg):
+        is_moe = cfg.family == "moe"
+
+        def body(carry, inp):
+            h = carry
+            lp, k_l, v_l = inp
+            hn = rms_norm(h, lp["attn_norm"])
+            a, k_new, v_new = attn_mod.attention_decode(
+                hn, lp["attn"], cfg, k_l, v_l, cur, cos, sin)
+            h = h + a
+            if is_moe:
+                hn2 = rms_norm(h, lp["moe_norm"])
+                y, _ = _moe_decode(hn2, lp, cfg)
+                if cfg.dense_residual:
+                    from repro.models.layers import mlp
+                    y = y + mlp(hn2, lp["dense_mlp"], cfg.mlp_kind)
+                h = h + y
+            else:
+                from repro.models.layers import mlp
+                h = h + mlp(rms_norm(h, lp["mlp_norm"]), lp["mlp"],
+                            cfg.mlp_kind)
+            return h, (k_new, v_new)
+
+        h, (k_all, v_all) = _scan_or_unroll(body, x,
+                                            (params["layers"], ck, cv),
+                                            self.cfg.scan_layers)
+        return h, k_all, v_all
+
+    def _ssm_decode_stack(self, layers, x, states, cfg):
+        def body(carry, inp):
+            h = carry
+            lp, st = inp
+            hn = rms_norm(h, lp["norm"])
+            y, st_new = ssm_mod.mamba2_decode(hn, lp["mamba"], cfg, st)
+            return h + y, st_new
+
+        h, new_states = _scan_or_unroll(body, x, (layers, states),
+                                        cfg.scan_layers)
+        return h, new_states
+
+    def _hybrid_decode(self, params, x, cache, cur, cos, sin):
+        cfg = self.cfg
+        ngroups, tail = self._hybrid_split()
+        new_cache = dict(cache)
+        shared = params["shared_attn"]
+
+        ssm_states = cache["ssm"]
+        if ngroups:
+            n_group_layers = ngroups * cfg.attn_every
+            gstates = jax.tree_util.tree_map(
+                lambda a: a[:n_group_layers].reshape(
+                    ngroups, cfg.attn_every, *a.shape[1:]), ssm_states)
+
+            def group_body(h, inp):
+                gparams, gstate, k_l, v_l = inp
+
+                def inner(h2, lp_st):
+                    lp, st = lp_st
+                    hn = rms_norm(h2, lp["norm"])
+                    y, st_new = ssm_mod.mamba2_decode(hn, lp["mamba"], cfg, st)
+                    return h2 + y, st_new
+
+                h, gstate_new = _scan_or_unroll(inner, h, (gparams, gstate),
+                                                cfg.scan_layers)
+                hn = rms_norm(h, shared["attn_norm"])
+                a, k_new, v_new = attn_mod.attention_decode(
+                    hn, shared["attn"], cfg, k_l, v_l, cur, cos, sin)
+                h = h + a
+                from repro.models.layers import mlp
+                h = h + mlp(rms_norm(h, shared["mlp_norm"]), shared["mlp"],
+                            cfg.mlp_kind)
+                return h, (gstate_new, k_new, v_new)
+
+            x, (gstates_new, k_all, v_all) = _scan_or_unroll(
+                group_body, x, (params["groups"], gstates, cache["k"],
+                                cache["v"]), cfg.scan_layers)
+            new_cache["k"], new_cache["v"] = k_all, v_all
+            flat_states = jax.tree_util.tree_map(
+                lambda a: a.reshape(n_group_layers, *a.shape[2:]), gstates_new)
+        else:
+            flat_states = None
+            n_group_layers = 0
+
+        if tail:
+            tstates = jax.tree_util.tree_map(
+                lambda a: a[n_group_layers:], ssm_states)
+            x, tstates_new = self._ssm_decode_stack(params["tail"], x,
+                                                    tstates, cfg)
+            if flat_states is not None:
+                flat_states = jax.tree_util.tree_map(
+                    lambda a, b: jnp.concatenate([a, b], axis=0),
+                    flat_states, tstates_new)
+            else:
+                flat_states = tstates_new
+        new_cache["ssm"] = flat_states
+        return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# block closures (partial-friendly, cfg/cos/sin static or closed over)
+# ---------------------------------------------------------------------------
+
+def _dense_block_fn(x, lp, *, cfg, cos, sin):
+    return tf.dense_block(x, lp, cfg, cos, sin)
+
+
+def _moe_block_fn(x, lp, *, cfg, cos, sin):
+    return tf.moe_block(x, lp, cfg, cos, sin)
+
+
+def _mamba_block_fn(x, lp, *, cfg):
+    return tf.mamba_block(x, lp, cfg)
+
+
+def _moe_decode(x, lp, cfg):
+    """Decode-time MoE: tiny T, use the same dispatch path."""
+    from repro.models.moe import moe_apply
+    return moe_apply(x, lp["moe"], cfg, capacity_factor=4.0)

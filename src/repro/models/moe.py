@@ -1,0 +1,155 @@
+"""Mixture-of-Experts layer: top-k routing + capacity-based expert-parallel
+dispatch (qwen3-moe 128e/top-8, arctic 128e/top-2 + dense residual).
+
+Design (DESIGN.md §5: "the mod2as insight reused"): expert dispatch is a
+block-sparse matmul.  As with SpMV, the TPU-hostile formulation is a ragged
+gather; the TPU-native one is a *padded rectangular* layout.  We use the
+capacity-based sort-free dispatch:
+
+  1. router: logits (T, E) -> top-k (experts distinct per token);
+  2. position-in-expert via one exclusive cumsum over the (T, E) one-hot
+     (distinct-experts-per-token makes the token-level cumsum exact);
+  3. scatter tokens into a padded (E, C, d) buffer (the ELL padding move —
+     capacity C = ceil(T*k/E)*cf, overflow dropped exactly like GShard);
+  4. batched expert matmuls (E, C, d)x(E, d, f) on the MXU;
+  5. gather back + weighted combine.
+
+Sharding: tokens P(('pod','data'),)  experts P('model',).  The buffer is
+annotated P('model', None, None) so steps 3/5 reshard token->expert and back —
+XLA SPMD emits the EP all-to-all pair.  The §Perf loop measures whether SPMD
+picks a true all-to-all or a gather/scatter pair, and hillclimbs from there.
+
+aux losses: standard load-balancing loss (mean_prob * mean_assignment * E)
+and router z-loss, both returned for the trainer to weight.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense_init, linear
+
+Params = dict[str, Any]
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg) -> Params:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    return {
+        "router": dense_init(kr, (d, e), dtype=jnp.float32),  # router in f32
+        "wi_gate": dense_init(kg, (e, d, f), dtype=cfg.param_dtype),
+        "wi_up": dense_init(ku, (e, d, f), dtype=cfg.param_dtype),
+        "wo": dense_init(kd, (e, f, d), dtype=cfg.param_dtype),
+    }
+
+
+def _default_groups(T: int) -> int:
+    """Dispatch groups = data-parallel width of the active mesh (GShard's
+    group-limited capacity): capacity is *per token shard*, so the dispatch
+    buffer stays O(local tokens) no matter the global batch."""
+    from repro.distributed.sharding import active_mesh, batch_axes
+    m = active_mesh()
+    if m is None:
+        return 1
+    g = 1
+    sizes = dict(zip(m.axis_names, m.axis_sizes))
+    for a in batch_axes(m):
+        g *= sizes.get(a, 1)
+    while g > 1 and T % g:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_apply(x: jax.Array, p: Params, cfg, *, capacity_factor: float = 1.25,
+              groups: int | None = None
+              ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """x: (B, L, d) -> (B, L, d), aux losses.
+
+    Group-limited top-k routing with capacity drop: tokens are split into
+    ``groups`` shards (aligned with the mesh's data axes) and each group
+    dispatches into its own (E, C_g, d) slab — per-device dispatch memory is
+    independent of global batch, and the group<->expert resharding is the EP
+    all-to-all.
+    """
+    B, L, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * L
+    G = groups or _default_groups(T)
+    t = T // G
+    assert t * G == T, (T, G)
+    xt = x.reshape(G, t, d)
+
+    # --- router (f32) ------------------------------------------------------
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, k)               # (G, t, k)
+    gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+
+    # aux: load-balance + z-loss (global means)
+    onehot = jax.nn.one_hot(gate_i, E, dtype=jnp.float32)  # (G, t, k, E)
+    assign = jnp.sum(onehot, axis=2)                       # (G, t, E) in {0,1}
+    load = jnp.mean(assign, axis=(0, 1)) / k               # sums to 1 over E
+    importance = jnp.mean(probs, axis=(0, 1))
+    aux_lb = jnp.sum(load * importance) * E
+    aux_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # --- position-in-expert (exclusive cumsum over tokens, per group) ------
+    cum = jnp.cumsum(assign, axis=1) - assign              # (G, t, E) excl.
+    pos = jnp.einsum("gtke,gte->gtk", onehot, cum).astype(jnp.int32)
+
+    C = int(max(1, round(t * k / E * capacity_factor)))
+    keep = pos < C
+    gate_w = gate_w * keep.astype(gate_w.dtype)
+    pos_c = jnp.where(keep, pos, C)                        # dustbin row C
+
+    # --- dispatch: scatter into (G, E, C+1, d), drop dustbin ---------------
+    a2a = getattr(cfg, "moe_dispatch", "a2a") == "a2a"
+    buf = jnp.zeros((G, E, C + 1, d), x.dtype)
+    if a2a:
+        # pin the scatter output to the residual stream's layout (tokens
+        # batch-sharded, d model-sharded): the scatter stays local
+        buf = constrain(buf, "batch", None, None, "model")
+    flat_e = gate_i.reshape(G, t * k)
+    flat_p = pos_c.reshape(G, t * k)
+    g_idx = jnp.broadcast_to(jnp.arange(G)[:, None], (G, t * k))
+    tok_idx = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(t), k)[None, :], (G, t * k))
+    buf = buf.at[g_idx, flat_e, flat_p].set(
+        xt[g_idx, tok_idx], mode="drop")
+    if a2a:
+        buf = constrain(buf, "batch", None, None, "model")
+    # the EP reshard: moving 'model' from the d dim to the E dim is an
+    # all-to-all in GSPMD (a2a path); from replicated it is a slice (gather
+    # path, after each data shard wrote the full-E slab)
+    buf = constrain(buf, "batch", "model", None, None)
+    buf = buf[:, :, :C, :]
+
+    # --- expert compute (batched MXU matmuls, local to each (g, e) tile) ---
+    wg = p["wi_gate"].astype(x.dtype)
+    wu = p["wi_up"].astype(x.dtype)
+    wo = p["wo"].astype(x.dtype)
+    gate = jnp.einsum("gecd,edf->gecf", buf, wg)
+    up = jnp.einsum("gecd,edf->gecf", buf, wu)
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    out_buf = jnp.einsum("gecf,efd->gecd", act, wo)        # (G, E, C, d)
+
+    # --- combine: gather back + weighted sum over the k slots --------------
+    out_buf = jnp.pad(out_buf, ((0, 0), (0, 0), (0, 1), (0, 0)))
+    if a2a:
+        # return all-to-all: E-sharded -> d-sharded, then the token-gather
+        # and k-sum are local and the result is already in the residual
+        # stream's (batch, None, 'model') layout
+        out_buf = constrain(out_buf, "batch", None, None, "model")
+        gathered = out_buf[g_idx, flat_e, flat_p].reshape(G, t, k, d)
+        y = jnp.sum(gathered * gate_w[..., None].astype(x.dtype), axis=2)
+        y = constrain(y.reshape(B, L, d), "batch", None, "model")
+        return y, {"aux_lb": aux_lb, "aux_z": aux_z}
+    out_buf = constrain(out_buf, "batch", None, None, None)  # all-gather E
+    gathered = out_buf[g_idx, flat_e, flat_p].reshape(G, t, k, d)
+    y = jnp.sum(gathered * gate_w[..., None].astype(x.dtype), axis=2)
+    return y.reshape(B, L, d), {"aux_lb": aux_lb, "aux_z": aux_z}

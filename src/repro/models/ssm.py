@@ -1,0 +1,247 @@
+"""Mamba2 (SSD — state-space duality) layer: chunked train path + recurrent
+decode path.
+
+The chunked SSD algorithm *is* the paper's recorded-loop pattern (DESIGN.md
+§5): a serial scan over chunks (``lax.scan`` = ArBB ``_for`` carrying the
+inter-chunk state) whose body is straight-line matmul IR (the intra-chunk
+"dual form" — MXU work), exactly the structure arbb_mxm2b hand-builds.
+
+Shapes (train):  x (B, L, H, P)   dt (B, L, H)   B,C (B, L, G, N)
+  intra-chunk:   Y_diag = (C_c B_cᵀ ∘ decay-mask) · (dt ∘ X_c)
+  chunk states:  S_c    = Σ_j exp(cum_last - cum_j) dt_j B_j ⊗ x_j
+  inter-chunk:   S      = exp(cum_last) S_prev + S_c      (the scan carry)
+  off-diag:      Y_off  = exp(cum) · C_c S_prev
+
+Decode: the O(1) recurrence  S ← a S + dt B ⊗ x,  y = C·S + D x  — why the
+``long_500k`` cell is *cheap* for SSM archs (state is seq-length independent).
+
+Causal depthwise conv1d (width 4) is realised as 4 shifted adds — gather-free
+(the mod2as DIA adaptation, reapplied).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, linear, rms_norm, rms_norm_init
+
+Params = dict[str, Any]
+
+__all__ = ["mamba2_init", "mamba2_apply", "mamba2_decode", "mamba2_state_init"]
+
+CHUNK = 256
+
+
+def mamba2_init(key, cfg) -> Params:
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * g * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # in_proj emits [z, x, B, C, dt]
+    proj_out = 2 * di + 2 * g * n + h
+    return {
+        "in_proj": dense_init(k1, (d, proj_out), dtype=cfg.pdtype),
+        "conv_w": dense_init(k2, (cfg.conv_width, conv_ch),
+                             scale=cfg.conv_width ** -0.5, dtype=cfg.pdtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.pdtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.asarray(
+            jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, h))), jnp.float32),
+        "norm": rms_norm_init(di, cfg.pdtype),
+        "out_proj": dense_init(k4, (di, d), dtype=cfg.pdtype),
+    }
+
+
+def _split_proj(proj, cfg):
+    di = cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * g * n]
+    dt = proj[..., di + di + 2 * g * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """(B, L, C) depthwise causal conv via shifted adds (gather-free)."""
+    width = w.shape[0]
+    out = xbc * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i, :]
+        out = out + shifted * w[width - 1 - i]
+    return out + b
+
+
+def _split_xbc(xbc, cfg):
+    di = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    x = xbc[..., :di]
+    bmat = xbc[..., di:di + g * n]
+    cmat = xbc[..., di + g * n:]
+    return x, bmat, cmat
+
+
+def ssd_chunked(x, dt, a_log, bmat, cmat, cfg, chunk: int = CHUNK):
+    """Chunked SSD.  x (B,L,H,P)  dt (B,L,H)  bmat/cmat (B,L,G,N).
+
+    Returns y (B,L,H,P) and the final state (B,H,P,N)."""
+    B, L, H, P = x.shape
+    G, N = bmat.shape[2], bmat.shape[3]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    rep = H // G
+
+    f32 = jnp.float32
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H).astype(f32)
+    bc = bmat.reshape(B, nc, chunk, G, N).astype(f32)
+    cc = cmat.reshape(B, nc, chunk, G, N).astype(f32)
+
+    A = -jnp.exp(a_log)                                     # (H,) negative
+    da = dtc * A                                            # (B,nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)                            # within-chunk
+    cum_last = cum[:, :, -1:, :]                            # (B,nc,1,H)
+
+    # --- intra-chunk (dual/attention form), f32 mask math ------------------
+    # scores[b,c,h,i,j] = (C_i · B_j) * exp(cum_i - cum_j) * dt_j  for i >= j
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", cc, bc)           # (B,nc,G,Q,Q)
+    cb = jnp.repeat(cb, rep, axis=2)                        # (B,nc,H,Q,Q)
+    cum_t = cum.transpose(0, 1, 3, 2)                       # (B,nc,H,Q)
+    decay = cum_t[..., :, None] - cum_t[..., None, :]       # [i,j] = cum_i-cum_j
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # zero masked entries BEFORE exp: i<j gives decay>0, exp overflows to
+    # inf and the where()-grad poisons the backward pass with NaNs
+    decay = jnp.where(causal, decay, 0.0)
+    mask = jnp.where(causal, jnp.exp(decay), 0.0)
+    scores = cb * mask * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores.astype(x.dtype), xc)
+
+    # --- chunk states -------------------------------------------------------
+    # S_c = sum_j exp(cum_last - cum_j) dt_j B_j ⊗ x_j   -> (B,nc,H,P,N)
+    w = jnp.exp(cum_last - cum) * dtc                       # (B,nc,Q,H)
+    xw = (xc.astype(f32) * w[..., None]).reshape(B, nc, chunk, G, rep, P)
+    bx = jnp.einsum("bcqgn,bcqgrp->bcgrpn", bc, xw)
+    bx = bx.reshape(B, nc, H, P, N)
+    chunk_decay = jnp.exp(cum_last[:, :, 0, :])             # (B,nc,H)
+
+    # --- inter-chunk scan (the recorded serial loop) ------------------------
+    def scan_body(s_prev, inp):
+        s_c, dec = inp                                      # (B,H,P,N), (B,H)
+        s = s_prev * dec[:, :, None, None] + s_c
+        return s, s_prev
+
+    s0 = jnp.zeros((B, H, P, N), f32)
+    bx_t = bx.transpose(1, 0, 2, 3, 4)                      # (nc,B,H,P,N)
+    dec_t = chunk_decay.transpose(1, 0, 2)                  # (nc,B,H)
+    s_final, s_prevs = jax.lax.scan(scan_body, s0, (bx_t, dec_t))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)              # (B,nc,H,P,N)
+
+    # --- off-diagonal contribution ------------------------------------------
+    s_prevs_g = s_prevs.reshape(B, nc, G, rep, P, N)
+    y_off = jnp.einsum("bcqgn,bcgrpn->bcqgrp", cc, s_prevs_g)
+    y_off = y_off.reshape(B, nc, chunk, H, P) * jnp.exp(cum)[..., None]
+    y = y_diag.astype(f32) + y_off
+    return y.reshape(B, L, H, P).astype(x.dtype), s_final
+
+
+def mamba2_apply(x: jax.Array, p: Params, cfg) -> jax.Array:
+    """Full mamba2 block: in_proj -> conv -> SSD -> gated norm -> out_proj."""
+    out, _ = mamba2_apply_state(x, p, cfg)
+    return out
+
+
+def mamba2_apply_state(x: jax.Array, p: Params, cfg
+                       ) -> tuple[jax.Array, dict]:
+    """Like :func:`mamba2_apply` but also returns the decode-continuation
+    state {conv, ssm} — the prefill path of the serving engine."""
+    B, L, d = x.shape
+    H, P = cfg.ssm_heads, cfg.ssm_headdim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+
+    proj = linear(x, p["in_proj"].astype(x.dtype))
+    z, xbc_raw, dt = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc_raw, p["conv_w"].astype(x.dtype),
+                       p["conv_b"].astype(x.dtype))
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xi, bmat, cmat = _split_xbc(xbc, cfg)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xi = xi.reshape(B, L, H, P)
+    bmat = bmat.reshape(B, L, G, N)
+    cmat = cmat.reshape(B, L, G, N)
+
+    chunk = min(CHUNK, L)
+    y, s_final = ssd_chunked(xi, dt, p["A_log"], bmat, cmat, cfg, chunk=chunk)
+    y = y + xi * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, L, cfg.d_inner)
+
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = rms_norm(gated, p["norm"])
+    out = linear(out, p["out_proj"].astype(x.dtype))
+
+    # conv shift register = last (w-1) *pre-conv* channel inputs
+    w = cfg.conv_width
+    pad = max(0, (w - 1) - L)
+    tail = xbc_raw[:, L - (w - 1 - pad):, :]
+    if pad:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    state = {"conv": tail, "ssm": s_final}
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# decode path (O(1) per token)
+# ---------------------------------------------------------------------------
+
+def mamba2_state_init(cfg, batch: int, dtype=jnp.float32) -> dict[str, jax.Array]:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim,
+                          cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba2_decode(x: jax.Array, p: Params, cfg, state: dict
+                  ) -> tuple[jax.Array, dict]:
+    """x: (B, 1, d) one token; returns (out (B,1,d), new state)."""
+    B = x.shape[0]
+    H, P = cfg.ssm_heads, cfg.ssm_headdim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    rep = H // G
+
+    proj = linear(x[:, 0, :], p["in_proj"].astype(x.dtype))   # (B, ·)
+    z, xbc, dt = _split_proj(proj, cfg)
+
+    # conv shift register
+    conv = state["conv"]                                      # (B, w-1, C)
+    window = jnp.concatenate([conv, xbc[:, None, :]], axis=1)  # (B, w, C)
+    w = p["conv_w"].astype(x.dtype)
+    xbc = jnp.einsum("bwc,wc->bc", window, w) + p["conv_b"].astype(x.dtype)
+    new_conv = window[:, 1:, :]
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+
+    xi, bmat, cmat = _split_xbc(xbc, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                       # (B, H)
+
+    xi = xi.reshape(B, H, P).astype(jnp.float32)
+    bmat = bmat.reshape(B, G, N).astype(jnp.float32)
+    cmat = cmat.reshape(B, G, N).astype(jnp.float32)
+    b_h = jnp.repeat(bmat, rep, axis=1)                       # (B, H, N)
+    c_h = jnp.repeat(cmat, rep, axis=1)
+
+    s = state["ssm"] * a[:, :, None, None] \
+        + (dt[:, :, None] * xi)[..., None] * b_h[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", s, c_h)
+    y = y + xi * p["D"][None, :, None]
+    y = y.reshape(B, cfg.d_inner).astype(x.dtype)
+
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = rms_norm(gated, p["norm"])
+    out = linear(out, p["out_proj"].astype(x.dtype))
+    return out[:, None, :], {"conv": new_conv, "ssm": s}

@@ -1,0 +1,157 @@
+"""mod2f — 1-D complex FFT, split-stream radix-2 (Jansen et al. [11]).
+
+The paper's ArBB stage loop is::
+
+    _for (u32 i = 1, i < n, i <<= 1) {
+        even = section(data, 0, n/2, 2);
+        odd  = section(data, 1, n/2, 2);
+        up   = even + odd;
+        down = (even - odd) * repeat(section(twiddles, 0, m), i);
+        data = cat(up, down);
+        m >>= 1;
+    } _end_for;
+
+with an initial "tangling" of the input and a twiddle container the paper does
+not spell out.  We derived both (verified against the DFT for n=2..2^20):
+
+  * tangling  = bit-reversal permutation of the input;
+  * twiddles  = the n/2 roots W_n^k stored in **bit-reversed order**:
+    ``twiddles[u] = W_n^{bitrev_{n/2}(u)}``.  The bit-reversed table is what
+    makes the paper's ``section(twiddles, 0, m)``-with-halving-m work at every
+    stage: for u < n/4, bitrev_{n/2}(u) = 2*bitrev_{n/4}(u), so the *prefix* of
+    the stage-0 table is exactly the stage-1 table, and so on recursively.
+
+With these, every stage is sections + elementwise ops + cat — no gather, no
+inter-stage reordering, and the output emerges in natural order, exactly the
+structural property the split-stream algorithm was designed for (paper §3.3:
+"No reordering of the output stream is necessary").
+
+The recorded loop's shapes are stage-invariant (always n/2), but the *section
+length* m changes per stage, so in JAX the stage loop is a trace-time unrolled
+loop over log2(n) stages (a "regular C++ loop" in ArBB terms) — n is a static
+program property for FFT plans, as it is for FFTW/MKL descriptors.
+
+``stockham_fft`` is the beyond-paper optimised comparator (autosorting,
+gather-free, batched) playing the role MKL DFTI played in the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import Dense, call, cat, repeat, section, unwrap, wrap
+
+__all__ = ["bitrev_permutation", "split_stream_twiddles", "arbb_fft",
+           "split_stream_fft", "stockham_fft", "naive_radix2_fft", "dft_ref"]
+
+
+def bitrev_permutation(n: int) -> np.ndarray:
+    """Bit-reversal permutation of [0, n) (the 'tangling' of §3.3)."""
+    bits = max(0, n.bit_length() - 1)
+    if n & (n - 1):
+        raise ValueError(f"n={n} is not a power of two")
+    perm = np.zeros(n, dtype=np.int64)
+    for i in range(n):
+        perm[i] = int(format(i, f"0{bits}b")[::-1], 2) if bits else 0
+    return perm
+
+
+def split_stream_twiddles(n: int, dtype=np.complex128) -> np.ndarray:
+    """W_n^k for k < n/2, stored in bit-reversed order (see module doc)."""
+    br = bitrev_permutation(n // 2) if n >= 4 else np.zeros(max(n // 2, 1), np.int64)
+    return np.exp(-2j * np.pi * br / n).astype(dtype)
+
+
+def arbb_fft(data: Dense, twiddles: Dense) -> Dense:
+    """The paper's stage loop, verbatim in the DSL.
+
+    ``data`` must already be tangled (bit-reversed); ``twiddles`` from
+    :func:`split_stream_twiddles`.  Returns the DFT in natural order.
+    """
+    data = wrap(data)
+    twiddles = wrap(twiddles)
+    n = data.shape[0]
+    m = n // 2
+    i = 1
+    while i < n:                       # trace-time stage loop (log2 n stages)
+        even = section(data, 0, n // 2, 2)
+        odd = section(data, 1, n // 2, 2)
+        up = even + odd
+        down = (even - odd) * repeat(section(twiddles, 0, m), i)
+        data = cat(up, down)
+        m >>= 1
+        i <<= 1
+    return data
+
+
+def split_stream_fft(x, twiddles=None) -> Dense:
+    """Tangle + run the split-stream stages.  Oracle: jnp.fft.fft."""
+    x = wrap(x)
+    n = x.shape[0]
+    perm = bitrev_permutation(n)
+    if twiddles is None:
+        tw = split_stream_twiddles(n, dtype=np.result_type(unwrap(x).dtype,
+                                                           np.complex64))
+        twiddles = wrap(jnp.asarray(tw))
+    tangled = Dense(unwrap(x)[perm])
+    return arbb_fft(tangled, wrap(twiddles))
+
+
+def stockham_fft(x) -> Dense:
+    """Stockham autosort radix-2 FFT — the optimised comparator.
+
+    Natural-order in/out, gather-free, fully vectorised: each stage is a
+    reshape + broadcast butterfly.  This is the restructuring a TPU wants
+    (contiguous lanes, no permutes inside the loop body).
+    """
+    x = unwrap(wrap(x))
+    n = x.shape[0]
+    if n & (n - 1):
+        raise ValueError("power-of-two sizes only")
+    ctype = jnp.result_type(x.dtype, jnp.complex64)
+    y = x.astype(ctype).reshape(1, n)          # (batch=segments, length)
+    stages = n.bit_length() - 1
+    for s in range(stages):
+        rows, cols = y.shape                    # rows = 2^s, cols = n / 2^s
+        half = cols // 2
+        a = y[:, :half]
+        b = y[:, half:]
+        k = jnp.arange(half)
+        w = jnp.exp(-2j * jnp.pi * k / cols).astype(ctype)
+        up = a + b
+        down = (a - b) * w[None, :]
+        # interleave up/down as new rows: (2*rows, half)
+        y = jnp.stack([up, down], axis=1).reshape(rows * 2, half)
+    return wrap(y.reshape(n)[bitrev_permutation(n)])
+
+
+def naive_radix2_fft(x) -> Dense:
+    """Simple in-place radix-2 Cooley-Tukey (the paper's 'simple serial
+    radix-2' comparator), recursive DIT."""
+    x = unwrap(wrap(x))
+    n = x.shape[0]
+    ctype = jnp.result_type(x.dtype, jnp.complex64)
+    x = x.astype(ctype)
+
+    def rec(v):
+        m = v.shape[0]
+        if m == 1:
+            return v
+        e = rec(v[0::2])
+        o = rec(v[1::2])
+        w = jnp.exp(-2j * jnp.pi * jnp.arange(m // 2) / m).astype(ctype)
+        return jnp.concatenate([e + w * o, e - w * o])
+
+    return wrap(rec(x))
+
+
+def dft_ref(x) -> Dense:
+    """O(n^2) DFT by definition — ultimate oracle for tiny sizes."""
+    x = unwrap(wrap(x))
+    n = x.shape[0]
+    k = jnp.arange(n)
+    mat = jnp.exp(-2j * jnp.pi * jnp.outer(k, k) / n)
+    return wrap(mat @ x.astype(mat.dtype))
+
+
+fft = call(lambda d, t: arbb_fft(d, t))

@@ -1,0 +1,128 @@
+"""Linear solvers: conjugate gradients (paper §3.4), Jacobi & Gauss-Seidel
+(ported to ArBB per the paper's introduction).
+
+The CG port is the paper's listing, line for line, on the DSL: the iteration
+is a recorded ``_while`` whose condition is ``r2 > stop && k < max_iters`` and
+whose body composes the SpMV kernel with ``add_reduce`` dot products.  The
+SpMV backend is pluggable — the paper runs arbb_spmv1/arbb_spmv2; we add the
+TPU-native DIA path for the banded Table-2 systems (gather-free; DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Dense, add_reduce, arbb_while, call, unwrap, wrap
+from repro.numerics import spmv as spmv_mod
+from repro.numerics.sparse import CSR, DIA, ELL
+
+__all__ = ["cg_solve", "jacobi_solve", "gauss_seidel_solve", "CGResult"]
+
+Matrix = Union[CSR, ELL, DIA]
+
+_BACKENDS: dict[str, Callable] = {
+    "spmv1": spmv_mod.arbb_spmv1,
+    "spmv2": spmv_mod.arbb_spmv2,
+    "ell": spmv_mod.spmv_ell,
+    "dia": spmv_mod.spmv_dia,
+}
+
+
+@dataclasses.dataclass
+class CGResult:
+    x: Dense
+    iterations: int
+    residual_sq: float
+
+
+def cg_solve(a: Matrix, b, *, stop: float = 1e-10, max_iters: int = 1000,
+             backend: str = "spmv2") -> CGResult:
+    """Conjugate gradients, the paper's §3.4 listing on the DSL.
+
+    Initialisation per the paper (x0 = 0, r0 = b, p0 = b - A x0 = b)."""
+    spmv = _BACKENDS[backend]
+    b = wrap(b)
+    bv = unwrap(b)
+    x0 = jnp.zeros_like(bv)
+    r0 = bv
+    p0 = bv
+    r2_0 = jnp.sum(bv * bv)
+
+    def cond(state):
+        x, r, p, r2, k = state
+        return jnp.logical_and(r2 > stop, k < max_iters)
+
+    def body(state):
+        x, r, p, r2, k = state
+        ap = unwrap(spmv(a, wrap(p)))                      # Ap = A @ p
+        alpha = r2 / jnp.sum(p * ap)
+        r2_old = r2
+        r_new = r - alpha * ap
+        r2_new = jnp.sum(r_new * r_new)
+        beta = r2_new / r2_old
+        x_new = x + alpha * p
+        p_new = r_new + beta * p
+        return (x_new, r_new, p_new, r2_new, k + 1)
+
+    state = arbb_while(cond, body, (x0, r0, p0, r2_0, jnp.int32(0)))
+    x, r, p, r2, k = state
+    return CGResult(x=wrap(x), iterations=int(k), residual_sq=float(r2))
+
+
+def _cg_jit_core(a: Matrix, bv, stop, max_iters: int, backend: str):
+    """jit-friendly CG core returning (x, r2, k)."""
+    spmv = _BACKENDS[backend]
+
+    def cond(state):
+        x, r, p, r2, k = state
+        return jnp.logical_and(r2 > stop, k < max_iters)
+
+    def body(state):
+        x, r, p, r2, k = state
+        ap = unwrap(spmv(a, wrap(p)))
+        alpha = r2 / jnp.sum(p * ap)
+        r_new = r - alpha * ap
+        r2_new = jnp.sum(r_new * r_new)
+        beta = r2_new / r2
+        return (x + alpha * p, r_new, r_new + beta * p, r2_new, k + 1)
+
+    init = (jnp.zeros_like(bv), bv, bv, jnp.sum(bv * bv), jnp.int32(0))
+    x, r, p, r2, k = arbb_while(cond, body, init)
+    return x, r2, k
+
+
+cg_jit = call(_cg_jit_core, static_argnums=(3, 4))
+
+
+def jacobi_solve(a_dense, b, *, iters: int = 200):
+    """Jacobi iteration x <- D^-1 (b - (A - D) x)."""
+    a = unwrap(wrap(a_dense))
+    bv = unwrap(wrap(b))
+    d = jnp.diagonal(a)
+    off = a - jnp.diag(d)
+
+    def body(_, x):
+        return (bv - off @ x) / d
+
+    x = jax.lax.fori_loop(0, iters, body, jnp.zeros_like(bv))
+    return wrap(x)
+
+
+def gauss_seidel_solve(a_dense, b, *, iters: int = 100):
+    """Gauss-Seidel forward sweeps (serial per row — a recorded _for)."""
+    a = unwrap(wrap(a_dense))
+    bv = unwrap(wrap(b))
+    n = a.shape[0]
+    d = jnp.diagonal(a)
+
+    def sweep(_, x):
+        def row(i, x):
+            s = bv[i] - a[i] @ x + a[i, i] * x[i]
+            return x.at[i].set(s / d[i])
+        return jax.lax.fori_loop(0, n, row, x)
+
+    x = jax.lax.fori_loop(0, iters, sweep, jnp.zeros_like(bv))
+    return wrap(x)

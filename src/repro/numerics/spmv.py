@@ -1,0 +1,101 @@
+"""mod2as — sparse matrix-vector multiplication.
+
+Four implementations spanning paper-faithful -> TPU-native:
+
+    arbb_spmv1   the paper's §3.2 port, literally: ``map()`` over rows with a
+                 recorded ``_for`` whose bounds come from rowp sections.
+                 (emap + arbb_for with traced bounds.)
+    arbb_spmv2   the paper's "contiguous" improvement.  The paper walks two
+                 pointers for contiguous runs; the vectorised analogue is a
+                 flat segmented formulation — one elementwise
+                 gather-multiply over nnz + segment-sum by row, which is
+                 exactly what 'exploit contiguity' buys on a vector machine.
+    spmv_ell     ELL layout: rectangular gather-multiply-reduce (the layout
+                 the Pallas kernel mirrors; DESIGN.md adaptation note 2).
+    spmv_dia     banded/diagonal: shifted FMAs, gather-free (CG fast path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Dense, arbb_for, call, emap, section, shift, unwrap, wrap
+from repro.numerics.sparse import CSR, DIA, ELL
+
+__all__ = ["arbb_spmv1", "arbb_spmv2", "spmv_ell", "spmv_dia",
+           "spmv1", "spmv2", "spmv_ell_jit", "spmv_dia_jit"]
+
+
+def arbb_spmv1(csr: CSR, invec: Dense) -> Dense:
+    """Faithful port of the paper's arbb_spmv1 (after Bell & Garland [10]).
+
+    ``map(local::reduce)(outvec, matvals, invec, indx, rowpi, rowpj)`` with a
+    recorded per-row ``_for`` that gathers ``matvals[i] * invec[indx[i]]``.
+    """
+    invec = wrap(invec)
+    nrows = csr.shape[0]
+    rowp = Dense(csr.rowp)
+    rowpi = section(rowp, 0, nrows)      # rowp[0 .. nrows)
+    rowpj = section(rowp, 1, nrows)      # rowp[1 .. nrows+1)
+
+    matvals, indx, x = csr.matvals, csr.indx, unwrap(invec)
+
+    def reduce(ri, rj):
+        def body(i, acc):
+            return acc + matvals[i] * x[indx[i]]
+        # dynamic (traced) bounds: lax.fori_loop lowers to while_loop
+        return arbb_for_dynamic(ri, rj, body, jnp.zeros((), matvals.dtype))
+
+    out = emap(reduce, in_axes=(0, 0))(rowpi, rowpj)
+    return wrap(out)
+
+
+def arbb_for_dynamic(start, stop, body, init):
+    """A recorded _for with data-dependent (traced) bounds, as the paper's
+    ``_for (i = rowpi, i != rowpj, ++i)`` requires."""
+    import jax.lax as lax
+    return lax.fori_loop(unwrap(start), unwrap(stop), body, init)
+
+
+def arbb_spmv2(csr: CSR, invec: Dense) -> Dense:
+    """The 'contiguity-exploiting' variant, vectorised.
+
+    Flat form: one fused gather-multiply over the nnz stream followed by a
+    row segment-sum.  On contiguous runs the gather becomes a unit-stride
+    read — the same property the paper's two-pointer rewrite exploits.
+    """
+    invec = wrap(invec)
+    nrows = csr.shape[0]
+    x = unwrap(invec)
+    prod = csr.matvals * x[csr.indx]                      # elementwise stream
+    # segment ids from rowp: row i owns [rowp[i], rowp[i+1])
+    seg = jnp.searchsorted(csr.rowp[1:], jnp.arange(prod.shape[0]), side="right")
+    out = jax.ops.segment_sum(prod, seg, num_segments=nrows)
+    return wrap(out)
+
+
+def spmv_ell(ell: ELL, invec: Dense) -> Dense:
+    """ELL SpMV: rectangular gather + row reduction (pure-jnp reference for
+    the Pallas kernel in repro.kernels.spmv)."""
+    x = unwrap(wrap(invec))
+    gathered = x[ell.cols]                 # (nrows, width)
+    return wrap(jnp.sum(ell.values * gathered, axis=1))
+
+
+def spmv_dia(dia: DIA, invec: Dense) -> Dense:
+    """DIA SpMV: y_i = sum_d diag_d[i] * x[i + off_d] — shifted FMAs only.
+
+    offsets are static, so this is a trace-time (regular-C++-style) loop:
+    gather-free, the TPU-native banded path (DESIGN.md §2)."""
+    x = wrap(invec)
+    n = dia.shape[0]
+    y = Dense.zeros((n,), dia.diags.dtype)
+    for d, off in enumerate(dia.offsets):       # unrolled at trace time
+        y = y + Dense(dia.diags[d]) * shift(x, -off)
+    return y
+
+
+spmv1 = call(arbb_spmv1)
+spmv2 = call(arbb_spmv2)
+spmv_ell_jit = call(spmv_ell)
+spmv_dia_jit = call(spmv_dia)

@@ -1,0 +1,3 @@
+"""repro.optim — AdamW, LR schedules (incl. WSD), gradient compression."""
+from repro.optim.adamw import adamw, apply_updates, global_norm, Optimizer
+from repro.optim import schedules, compress  # noqa: F401

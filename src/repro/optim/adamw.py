@@ -1,0 +1,92 @@
+"""AdamW from scratch (pure pytree transform), with global-norm clipping and
+configurable moment dtype (bf16 moments for the 480B config — see DESIGN.md
+memory budget).
+
+API mirrors the optax convention (init/update) without the dependency:
+
+    opt = adamw(schedule, b1=.9, b2=.95, wd=.1, clip=1.0)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "apply_updates", "global_norm", "Optimizer"]
+
+Pytree = Any
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    mu: Pytree
+    nu: Pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], Any]
+    update: Callable[..., tuple[Pytree, Any]]
+
+
+def adamw(schedule: Callable, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip: Optional[float] = 1.0, moment_dtype=jnp.float32) -> Optimizer:
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=moment_dtype)
+        return AdamState(count=jnp.zeros((), jnp.int32),
+                         mu=jax.tree_util.tree_map(z, params),
+                         nu=jax.tree_util.tree_map(z, params))
+
+    def update(grads, state: AdamState, params):
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        if clip is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, clip / jnp.maximum(gn, 1e-12))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+        count = state.count + 1
+        lr = schedule(count)
+        b1c = 1 - b1 ** count.astype(jnp.float32)
+        b2c = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m_new = b1 * m32 + (1 - b1) * g
+            v_new = b2 * v32 + (1 - b2) * g * g
+            mhat = m_new / b1c
+            vhat = v_new / b2c
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step, m_new.astype(moment_dtype),
+                    v_new.astype(moment_dtype))
+
+        out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], out,
+                                         is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+        return updates, AdamState(count=count, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)

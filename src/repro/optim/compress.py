@@ -1,0 +1,80 @@
+"""Gradient compression with error feedback (the cross-pod bandwidth trick).
+
+At O4 the slow axis is 'pod' (inter-pod DCN ≪ intra-pod ICI).  Int8-quantised
+gradient exchange with error feedback keeps convergence while cutting
+cross-pod bytes 4x (vs f32) — the distributed-optimisation lever called out in
+the assignment.
+
+Two pieces:
+
+  * ``quantize/dequantize + error feedback`` — an optimizer-level transform
+    (``compressed``) usable under plain pjit: the quantisation error is
+    carried in the state and re-added next step, so information is delayed,
+    not lost (Seide et al. 1-bit SGD lineage).
+  * ``compressed_psum`` — a shard_map building block that performs the
+    quantise -> psum(int32) -> dequantise exchange on a named axis; unit
+    tested on host meshes and used by the O4 trainer when
+    ``grad_compression='int8'``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed", "compressed_psum"]
+
+Pytree = Any
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed(optimizer):
+    """Wrap an Optimizer: grads pass through int8 quantisation with error
+    feedback before the inner update."""
+    def init(params):
+        ef = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"inner": optimizer.init(params), "ef": ef}
+
+    def update(grads, state, params):
+        def q(g, e):
+            g32 = g.astype(jnp.float32) + e
+            qv, s = quantize_int8(g32)
+            deq = dequantize_int8(qv, s)
+            return deq, g32 - deq
+
+        pairs = jax.tree_util.tree_map(q, grads, state["ef"])
+        gq = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+        ef = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+        updates, inner = optimizer.update(gq, state["inner"], params)
+        return updates, {"inner": inner, "ef": ef}
+
+    from repro.optim.adamw import Optimizer
+    return Optimizer(init=init, update=update)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-quantised all-reduce over a named axis (use inside shard_map).
+
+    Each participant quantises locally; the psum runs on int32 accumulators
+    (no overflow for <= 2^23 participants); scales are max-combined.  The
+    result is the dequantised mean-preserving sum.
+    """
+    q, scale = quantize_int8(x)
+    scale = jax.lax.pmax(scale, axis_name)        # common scale upper bound
+    # re-quantise against the shared scale so the sum is coherent
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale

@@ -1,0 +1,61 @@
+"""LR schedules: WSD (minicpm's Warmup-Stable-Decay), cosine, linear.
+
+Pure ``step -> lr`` functions of jnp scalars (jit/scan friendly).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["wsd", "cosine", "constant", "linear_warmup"]
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.full((), lr, jnp.float32)
+    return f
+
+
+def linear_warmup(lr: float, warmup: int):
+    def f(step):
+        frac = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        return jnp.asarray(lr * frac, jnp.float32)
+    return f
+
+
+def wsd(peak_lr: float, total_steps: int, *, warmup_frac: float = 0.01,
+        decay_frac: float = 0.1, floor: float = 0.1):
+    """Warmup-Stable-Decay (minicpm, arXiv:2404.06395).
+
+    Linear warmup -> flat plateau -> exponential decay to floor*peak over the
+    final ``decay_frac`` of training.  The plateau is what lets minicpm resume
+    and branch runs (continual pretraining) — which is also why our
+    checkpoint/restart logic stores the step: restarting mid-plateau is
+    schedule-exact.
+    """
+    warmup = max(1, int(total_steps * warmup_frac))
+    decay_start = int(total_steps * (1.0 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / warmup, 1.0)
+        decay_t = jnp.clip((step - decay_start) /
+                           jnp.maximum(total_steps - decay_start, 1), 0.0, 1.0)
+        decay = peak_lr * jnp.power(floor, decay_t)
+        return jnp.where(step < decay_start, warm, decay).astype(jnp.float32)
+
+    return f
+
+
+def cosine(peak_lr: float, total_steps: int, *, warmup_frac: float = 0.01,
+           floor: float = 0.1):
+    warmup = max(1, int(total_steps * warmup_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / warmup, 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                     0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos).astype(jnp.float32)
+
+    return f

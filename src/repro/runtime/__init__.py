@@ -1,0 +1,7 @@
+from repro.runtime.fault_tolerance import (FileHeartbeatStore, Heartbeat,
+                                           HeartbeatStore, Monitor,
+                                           TrainingSupervisor, WorkerState)
+from repro.runtime.elastic import ElasticPlan, replan
+
+__all__ = ["FileHeartbeatStore", "Heartbeat", "HeartbeatStore", "Monitor",
+           "TrainingSupervisor", "WorkerState", "ElasticPlan", "replan"]

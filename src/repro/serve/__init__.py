@@ -1,0 +1,3 @@
+from repro.serve.engine import Engine, SamplingParams, sample_token
+
+__all__ = ["Engine", "SamplingParams", "sample_token"]

@@ -1,0 +1,95 @@
+"""Batched serving engine: prefill + jit'd decode loop with sampling.
+
+The engine is the inference counterpart of the trainer: it owns the jit'd
+``prefill_step`` / ``decode_step`` (optionally pjit'd over a mesh with the
+same partition rules as training) and exposes ``generate`` for batched
+requests.  Continuous batching is approximated with a fixed-slot batch and
+per-slot stop tracking (slot recycling is the host loop's job).
+
+serve_step (the dry-run artifact for decode_* / long_* shapes) is exactly
+``decode_step``: one new token against a KV cache of ``seq_len``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import LM
+
+Params = dict[str, Any]
+
+__all__ = ["SamplingParams", "Engine", "sample_token"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 1.0
+    top_k: int = 0              # 0 = no top-k
+    greedy: bool = False
+
+
+def sample_token(key, logits: jax.Array, sp: SamplingParams) -> jax.Array:
+    """logits (B, V) -> tokens (B,) int32."""
+    if sp.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / max(sp.temperature, 1e-6)
+    if sp.top_k:
+        kth = jax.lax.top_k(logits, sp.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+class Engine:
+    """Owns compiled prefill/decode; host-side loop drives generation."""
+
+    def __init__(self, lm: LM, params: Params, *, max_len: int = 2048,
+                 sampling: SamplingParams = SamplingParams(greedy=True),
+                 donate_cache: bool = True):
+        self.lm = lm
+        self.params = params
+        self.max_len = max_len
+        self.sampling = sampling
+
+        self._prefill = jax.jit(
+            functools.partial(lm.prefill, max_len=max_len))
+
+        def decode_fn(params, cache, tokens, key):
+            logits, cache = lm.decode_step(params, cache, tokens)
+            key, sub = jax.random.split(key)
+            nxt = sample_token(sub, logits, self.sampling)
+            return cache, nxt, key
+
+        # donating the cache buffer keeps decode allocation-free
+        self._decode = jax.jit(
+            decode_fn, donate_argnums=(1,) if donate_cache else ())
+
+    def generate(self, tokens: jax.Array, *, max_new_tokens: int = 32,
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 frontend_embeds: Optional[jax.Array] = None) -> jax.Array:
+        """tokens (B, S) prompt -> (B, max_new_tokens) generated ids."""
+        B = tokens.shape[0]
+        logits, cache = self._prefill(self.params, tokens, frontend_embeds)
+        key = jax.random.PRNGKey(seed)
+        key, sub = jax.random.split(key)
+        nxt = sample_token(sub, logits, self.sampling)
+
+        outs = [nxt]
+        done = jnp.zeros((B,), bool)
+        for _ in range(max_new_tokens - 1):
+            if eos_id is not None:
+                done = done | (nxt == eos_id)
+                if bool(jnp.all(done)):
+                    break
+            cache, nxt, key = self._decode(self.params, cache,
+                                           nxt[:, None], key)
+            outs.append(nxt)
+        out = jnp.stack(outs, axis=1)
+        if out.shape[1] < max_new_tokens:   # early-stopped: pad with eos
+            pad = jnp.full((B, max_new_tokens - out.shape[1]),
+                           eos_id if eos_id is not None else 0, jnp.int32)
+            out = jnp.concatenate([out, pad], axis=1)
+        return out

@@ -1,0 +1,5 @@
+from repro.train.state import TrainState, create, abstract_state
+from repro.train.step import make_train_step, make_eval_step, shard_batch
+
+__all__ = ["TrainState", "create", "abstract_state", "make_train_step",
+           "make_eval_step", "shard_batch"]

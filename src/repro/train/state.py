@@ -1,0 +1,37 @@
+"""TrainState: params + optimizer state + step counter, as one pytree.
+
+Kept deliberately framework-free (a NamedTuple of pytrees) so that
+``jax.eval_shape`` over :func:`create` gives the abstract state the dry-run
+and the checkpointer both consume, and pjit shardings apply leaf-wise.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import LM
+from repro.optim import Optimizer
+
+Pytree = Any
+
+__all__ = ["TrainState", "create", "abstract_state"]
+
+
+class TrainState(NamedTuple):
+    step: jax.Array          # () int32
+    params: Pytree
+    opt_state: Any
+
+
+def create(lm: LM, opt: Optimizer, key) -> TrainState:
+    params = lm.init(key)
+    return TrainState(step=jnp.zeros((), jnp.int32),
+                      params=params,
+                      opt_state=opt.init(params))
+
+
+def abstract_state(lm: LM, opt: Optimizer) -> TrainState:
+    """ShapeDtypeStruct pytree of the state — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: create(lm, opt, jax.random.PRNGKey(0)))

@@ -1,0 +1,3 @@
+from repro.utils import hlo, roofline
+
+__all__ = ["hlo", "roofline"]

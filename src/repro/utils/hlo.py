@@ -1,0 +1,120 @@
+"""HLO-text introspection: collective-byte accounting for the roofline.
+
+``collective_bytes`` parses optimized HLO (``compiled.as_text()``), resolves
+each collective's *operand* sizes (operands are name references, so we first
+build an instruction-name -> result-bytes map), and returns totals per
+collective kind.  Used by the dry-run and the §Perf loop ("is this step
+all-gathering the same tensor twice?").
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "dtype_bytes", "parse_result_bytes",
+           "count_ops", "COLLECTIVE_KINDS"]
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+# one typed tensor, e.g. bf16[256,1024]{1,0} or f32[] or s32[16]
+_TENSOR_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# an instruction definition: %name = <type(s)> opcode(...)
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*(.+)$")
+
+
+def dtype_bytes(dtype: str) -> int:
+    return _DTYPE_BYTES.get(dtype, 4)
+
+
+def _tensor_bytes(text: str) -> int:
+    """Sum bytes over every typed tensor literal in ``text`` (handles
+    tuples by summing elements)."""
+    total = 0
+    for dt, dims in _TENSOR_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_result_bytes(hlo_text: str) -> dict[str, int]:
+    """instruction name -> result size in bytes (tuples summed)."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # result type(s) = everything before the opcode token; cheap cut:
+        # take text up to the first '(' after the opcode — parsing the full
+        # grammar is unnecessary because we only need tensor literals that
+        # appear *before* the operand list, and operand references carry no
+        # types in optimized dumps.
+        head = rhs.split("(", 1)[0]
+        out[name] = _tensor_bytes(head)
+    return out
+
+
+def _operand_names(rhs: str) -> list[str]:
+    """Operand references of an instruction line (inside the call parens)."""
+    try:
+        args = rhs.split("(", 1)[1]
+    except IndexError:
+        return []
+    # stop at the matching close-paren (operand list never nests parens
+    # except for tuple types, which don't occur in optimized operand lists)
+    depth, end = 1, len(args)
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%([^\s,)]+)", args[:end])
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Total *operand* bytes per collective kind (plus 'total').
+
+    Async pairs (``-start``/``-done``) are counted once, at the start op.
+    """
+    sizes = parse_result_bytes(hlo_text)
+    totals: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        _, rhs = m.groups()
+        opcode_m = re.search(
+            r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start)?\(", rhs)
+        if not opcode_m:
+            continue
+        kind = opcode_m.group(1)
+        ops = _operand_names(rhs)
+        b = sum(sizes.get(o, 0) for o in ops)
+        if b == 0:
+            # fallback: result bytes (e.g. operand defined out of scope)
+            head = rhs.split("(", 1)[0]
+            b = _tensor_bytes(head)
+        totals[kind] += b
+        totals["total"] += b
+    return dict(totals)
+
+
+def count_ops(hlo_text: str, opcode: str) -> int:
+    """Occurrences of an opcode (e.g. 'fusion', 'dot', 'all-gather')."""
+    return len(re.findall(rf"\b{re.escape(opcode)}(?:-start)?\(", hlo_text))

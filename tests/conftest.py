@@ -1,0 +1,27 @@
+"""Shared fixtures.  Deliberately does NOT set xla_force_host_platform_
+device_count — tests see the real single CPU device; only launch/dryrun.py
+(run as its own process) sees 512 placeholder devices."""
+import numpy as np
+import pytest
+
+
+class _F32Rng:
+    """np.random.Generator facade returning float32 (JAX's default width —
+    f64 inputs would silently downcast and break exact-equality asserts)."""
+
+    def __init__(self, seed=0):
+        self._rng = np.random.default_rng(seed)
+
+    def standard_normal(self, *a, **k):
+        return self._rng.standard_normal(*a, **k).astype(np.float32)
+
+    def integers(self, *a, **k):
+        return self._rng.integers(*a, **k)
+
+    def uniform(self, *a, **k):
+        return self._rng.uniform(*a, **k).astype(np.float32)
+
+
+@pytest.fixture
+def rng():
+    return _F32Rng(0)

@@ -1,0 +1,104 @@
+"""Per-assigned-architecture smoke tests (deliverable f).
+
+Each assigned arch is instantiated at a REDUCED config of the same family
+(same block structure, narrower/shallower) and runs one forward + one train
+step on CPU, asserting output shapes and finiteness.  The FULL configs are
+exercised only by the dry-run (launch/dryrun.py — ShapeDtypeStructs, no
+allocation)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.launch.train import reduce_config
+from repro.models.lm import LM
+from repro.optim import adamw
+from repro.optim.schedules import constant
+from repro.train import create, make_train_step
+
+ARCHS = [a for a in list_configs() if not a.startswith("euroben")]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_arch_forward_and_train_step(arch):
+    cfg = reduce_config(get_config(arch), 0.08, seq_len=64)
+    lm = LM(cfg)
+    opt = adamw(constant(1e-3))
+    state = create(lm, opt, jax.random.PRNGKey(0))
+
+    B, S = 2, 64
+    s_tok = S - (cfg.frontend_len if cfg.frontend else 0)
+    key = jax.random.PRNGKey(1)
+    batch = {
+        "tokens": jax.random.randint(key, (B, s_tok), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, s_tok), 0, cfg.vocab_size),
+    }
+    if cfg.frontend:
+        batch["frontend_embeds"] = jnp.zeros((B, cfg.frontend_len,
+                                              cfg.d_model), jnp.float32)
+
+    # forward
+    logits, _ = lm.forward(state.params, batch["tokens"],
+                           batch.get("frontend_embeds"))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    # one train step
+    step_fn = jax.jit(make_train_step(lm, opt))
+    state2, metrics = step_fn(state, batch)
+    assert int(state2.step) == 1
+    loss = float(metrics["loss"])
+    assert jnp.isfinite(loss) and loss > 0
+    # params actually changed
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        state.params, state2.params)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The registered FULL configs carry the exact assigned hyperparams."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    }[arch]
+    L, d, h, kv, dff, v = expected
+    assert cfg.num_layers == L and cfg.d_model == d
+    assert cfg.vocab_size == v
+    if h:
+        assert cfg.num_heads == h and cfg.num_kv_heads == kv
+    if arch == "qwen3-moe-30b-a3b":
+        assert cfg.num_experts == 128 and cfg.experts_per_token == 8
+        assert cfg.moe_d_ff == dff
+    elif arch == "arctic-480b":
+        assert cfg.num_experts == 128 and cfg.experts_per_token == 2
+        assert cfg.moe_d_ff == dff and cfg.dense_residual
+    elif dff:
+        assert cfg.d_ff == dff
+    if arch == "mamba2-370m":
+        assert cfg.ssm_state == 128 and cfg.family == "ssm"
+    if arch == "zamba2-7b":
+        assert cfg.ssm_state == 64 and cfg.family == "hybrid"
+    if arch == "qwen3-1.7b":
+        assert cfg.qk_norm
+    if arch == "gemma-2b":
+        assert cfg.mlp_kind == "geglu" and cfg.head_dim == 256
+    if arch == "qwen2-vl-72b":
+        assert cfg.m_rope and cfg.frontend == "vision"
+    if arch == "musicgen-medium":
+        assert cfg.frontend == "audio"
+
+
+def test_registry_has_all_ten():
+    assert len(ARCHS) == 10

