@@ -1,0 +1,149 @@
+"""``--backend-sweep`` — benchmark every registered variant of each op.
+
+The paper's methodology is a fixed program text measured across runtimes
+(ArBB O2/O3 vs OpenMP vs MKL, Figs. 1-7).  This module reproduces that for
+our own retargeting plane: for each registered op it walks the registry's
+variants, times the admissible ones on canonical inputs, and prints a
+per-variant comparison table.  Unavailable variants (e.g. 'pallas' off-TPU)
+are reported, not hidden, so a sweep on CPU documents exactly which column
+the paper's "optimised" bar would fill in on real hardware.
+
+    PYTHONPATH=src python -m benchmarks.run --backend-sweep
+    PYTHONPATH=src python -m benchmarks.run --only mod2am --backend-sweep
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import registry
+from benchmarks.common import time_fn, print_table
+
+
+# --- canonical inputs per op ----------------------------------------------
+# each case: (label, args, kwargs, flops)
+
+def _matmul_cases() -> Iterable[tuple]:
+    for n in (128, 256):
+        rng = np.random.default_rng(n)
+        a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+        yield f"{n}x{n}", (a, b), {}, 2.0 * n ** 3
+
+
+def _spmv_ell_cases() -> Iterable[tuple]:
+    for nrows, width in ((256, 16), (1024, 32)):
+        rng = np.random.default_rng(nrows)
+        vals = jnp.asarray(rng.standard_normal((nrows, width)), jnp.float32)
+        cols = jnp.asarray(rng.integers(0, nrows, (nrows, width)), jnp.int32)
+        x = jnp.asarray(rng.standard_normal(nrows), jnp.float32)
+        yield f"{nrows}x{width}", (vals, cols, x), {}, 2.0 * nrows * width
+
+
+def _spmv_dia_cases() -> Iterable[tuple]:
+    for n, ndiag in ((1024, 7), (4096, 15)):
+        rng = np.random.default_rng(n)
+        offsets = tuple(range(-(ndiag // 2), ndiag // 2 + 1))
+        diags = jnp.asarray(rng.standard_normal((ndiag, n)), jnp.float32)
+        x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        yield f"n{n}d{ndiag}", (diags, offsets, x), {}, 2.0 * n * ndiag
+
+
+def _fft_cases() -> Iterable[tuple]:
+    for logn in (10, 12):
+        n = 1 << logn
+        rng = np.random.default_rng(logn)
+        z = jnp.asarray(rng.standard_normal(n) + 1j * rng.standard_normal(n),
+                        jnp.complex64)
+        yield f"n{n}", (z,), {}, 5.0 * n * logn
+
+
+def _flash_cases() -> Iterable[tuple]:
+    for b, h, l, d in ((1, 4, 256, 64),):
+        rng = np.random.default_rng(l)
+        q, k, v = (jnp.asarray(rng.standard_normal((b, h, l, d)), jnp.float32)
+                   for _ in range(3))
+        yield f"b{b}h{h}l{l}d{d}", (q, k, v), {"causal": True}, \
+            4.0 * b * h * l * l * d
+
+
+def _solver_spmv_cases() -> Iterable[tuple]:
+    """One banded system in every layout; ``accepts`` routes each variant to
+    the layout it understands (paper Table-2 style)."""
+    from repro.core import bind
+    from repro.numerics import sparse
+    n, bw = 512, 31
+    a = sparse.banded_spd(n, bw, seed=7)
+    rng = np.random.default_rng(7)
+    x = bind(rng.standard_normal(n).astype(np.float32))
+    nnz = float(np.count_nonzero(np.abs(a) > 0))
+    csr = sparse.csr_from_dense(a)
+    yield f"csr_n{n}bw{bw}", (csr, x), {}, 2.0 * nnz
+    yield f"ell_n{n}bw{bw}", (sparse.ell_from_csr(csr), x), {}, 2.0 * nnz
+    yield f"dia_n{n}bw{bw}", (sparse.dia_from_dense(a), x), {}, 2.0 * nnz
+
+
+CASES: dict[str, Callable[[], Iterable[tuple]]] = {
+    "matmul": _matmul_cases,
+    "spmv_ell": _spmv_ell_cases,
+    "spmv_dia": _spmv_dia_cases,
+    "fft": _fft_cases,
+    "flash_attention": _flash_cases,
+    "solver_spmv": _solver_spmv_cases,
+}
+
+#: benchmark-suite name (--only) -> ops swept
+SUITE_OPS = {
+    "mod2am": ("matmul",),
+    "mod2as": ("spmv_ell", "spmv_dia"),
+    "mod2f": ("fft",),
+    "cg": ("solver_spmv",),
+    "roofline": (),
+}
+
+
+def sweep_op(op: str) -> list[dict]:
+    rows = []
+    ctx = registry.select_context()
+    for label, args, kwargs, flops in CASES[op]():
+        try:
+            selected = registry.select(op, *args, **kwargs).name
+        except LookupError:
+            selected = None
+        for v in registry.variants(op):
+            row = {"op": op, "case": label, "variant": v.name,
+                   "plane": v.plane or "-",
+                   "selected": "*" if v.name == selected else ""}
+            if not v.is_available(ctx):
+                row.update(seconds="", gflops="",
+                           note=f"unavailable on {ctx.platform}")
+            elif not v.matches(*args, **kwargs):
+                row.update(seconds="", gflops="", note="layout/shape mismatch")
+            else:
+                t = time_fn(
+                    lambda *a: registry.dispatch(op, *a, variant=v.name,
+                                                 **kwargs), *args)
+                row.update(seconds=round(t, 6),
+                           gflops=round(flops / t / 1e9, 3), note="")
+            rows.append(row)
+    return rows
+
+
+def main(only: Optional[str] = None) -> list[dict]:
+    ops = SUITE_OPS[only] if only else tuple(CASES)
+    all_rows = []
+    for op in ops:
+        rows = sweep_op(op)
+        print_table(f"backend sweep: {op}", rows,
+                    ["op", "case", "variant", "plane", "seconds", "gflops",
+                     "selected", "note"])
+        all_rows.extend(rows)
+    if not all_rows:
+        print(f"backend sweep: no registry ops for suite {only!r}")
+    return all_rows
+
+
+if __name__ == "__main__":
+    main()

@@ -3,6 +3,15 @@
     PYTHONPATH=src python -m benchmarks.run           # all, short inputs
     PYTHONPATH=src python -m benchmarks.run --full    # paper's full sweeps
     PYTHONPATH=src python -m benchmarks.run --only mod2am
+    PYTHONPATH=src python -m benchmarks.run --only mod2am --backend-sweep
+
+``--backend-sweep`` benchmarks every *registered registry variant* per op
+instead of the paper-figure suites — the ArBB-vs-OpenMP-vs-MKL comparison,
+reproduced for our own retargeting plane.
+
+The ``--json-out`` payload records, per suite, the row data, wall time,
+status, and the kernel plane the registry resolved while it ran, so
+``BENCH_*.json`` trajectories stay comparable across PRs and machines.
 """
 from __future__ import annotations
 
@@ -18,8 +27,38 @@ def main(argv=None) -> int:
                     help="the paper's full input sweeps (slower)")
     ap.add_argument("--only", default=None,
                     choices=["mod2am", "mod2as", "mod2f", "cg", "roofline"])
+    ap.add_argument("--backend-sweep", action="store_true",
+                    help="benchmark every registered registry variant per op "
+                         "and print a per-variant comparison table")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
+
+    import jax
+    from repro.core import registry
+
+    meta = {"platform": jax.default_backend(), "jax": jax.__version__,
+            "backend": registry.resolve_backend()}
+
+    if args.backend_sweep:
+        from benchmarks import backend_sweep
+        if args.full:
+            print("note: --full has no effect on --backend-sweep "
+                  "(canonical inputs only)")
+        t0 = time.time()
+        try:
+            rows = backend_sweep.main(only=args.only)
+            entry = {"status": "ok", "rows": rows}
+        except Exception as e:
+            print(f"[backend_sweep] FAILED: {type(e).__name__}: {e}")
+            entry = {"status": "error", "error": f"{type(e).__name__}: {e}"}
+        entry["seconds"] = round(time.time() - t0, 3)
+        entry["backend"] = registry.resolve_backend()
+        payload = {"meta": meta, "suites": {"backend_sweep": entry}}
+        if args.json_out:
+            with open(args.json_out, "w") as f:
+                json.dump(payload, f, default=str)
+        print("\nbackend sweep complete")
+        return 1 if entry["status"] == "error" else 0
 
     from benchmarks import mod2am, mod2as, mod2f, cg, roofline_table
 
@@ -33,21 +72,34 @@ def main(argv=None) -> int:
     if args.only:
         suites = {args.only: suites[args.only]}
 
-    all_rows = {}
+    payload = {"meta": meta, "suites": {}}
+    failed = []
     for name, fn in suites.items():
         t0 = time.time()
+        backend = registry.resolve_backend()
         try:
-            all_rows[name] = fn()
+            rows = fn()
+            entry = {"status": "ok", "rows": rows}
         except FileNotFoundError as e:
             print(f"[{name}] skipped: {e}")
-        print(f"[{name}] done in {time.time()-t0:.1f}s")
+            entry = {"status": "skipped", "error": str(e)}
+        except Exception as e:                       # keep the run alive:
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}")
+            entry = {"status": "error",
+                     "error": f"{type(e).__name__}: {e}"}
+            failed.append(name)
+        entry["seconds"] = round(time.time() - t0, 3)
+        entry["backend"] = backend
+        payload["suites"][name] = entry
+        print(f"[{name}] done in {entry['seconds']:.1f}s "
+              f"(backend={backend}, status={entry['status']})")
 
     if args.json_out:
         with open(args.json_out, "w") as f:
-            json.dump({k: v for k, v in all_rows.items() if v is not None},
-                      f, default=str)
-    print("\nbenchmarks complete")
-    return 0
+            json.dump(payload, f, default=str)
+    print("\nbenchmarks complete" + (f" ({len(failed)} suite(s) failed: "
+                                     f"{', '.join(failed)})" if failed else ""))
+    return 1 if failed else 0
 
 
 def _roofline(mod):

@@ -7,6 +7,9 @@ Public surface mirrors the paper's vocabulary:
     arbb_for, arbb_while, arbb_if, unrolled
     call, capture, emap
     ExecLevel, use_level             O2 / O3 / O4 runtime retargeting
+    registry (dispatch, register, use_backend)
+                                     the unified operator registry: one
+                                     retargeting plane for ExecLevel × backend
 """
 from repro.core.containers import (
     Dense,
@@ -39,6 +42,9 @@ from repro.core.ops import (
 from repro.core.control import arbb_for, arbb_while, arbb_if, unrolled
 from repro.core.closure import call, capture, emap, Closure, CallClosure
 from repro.core.execlevel import ExecLevel, ExecContext, use_level, current
+from repro.core import registry
+from repro.core.registry import (dispatch, register, use_backend,
+                                 resolve_backend)
 
 __all__ = [
     "Dense", "bind", "f32", "f64", "i32", "i64", "usize", "is_dense",
@@ -49,4 +55,5 @@ __all__ = [
     "arbb_for", "arbb_while", "arbb_if", "unrolled",
     "call", "capture", "emap", "Closure", "CallClosure",
     "ExecLevel", "ExecContext", "use_level", "current",
+    "registry", "dispatch", "register", "use_backend", "resolve_backend",
 ]

@@ -1,0 +1,221 @@
+"""``blocked()`` — the pad-to-block / call / unpad combinator, with a
+persistent per-(op, shape, dtype) block-size autotuning cache.
+
+Every Pallas kernel wants block-aligned inputs; every wrapper used to
+hand-roll the same ``round_up``/``jnp.pad``/slice dance with hardcoded 128s.
+``blocked()`` centralises it:
+
+    inner(*padded_args, blocks={dim: size}, interpret=...)  -> padded output
+    blocked('matmul', inner,
+            pad={0: ('m', 'k'), 1: ('k', 'n')},   # arg index -> dim per axis
+            out=('m', 'n'),                        # output axes to slice back
+            defaults={'m': 128, 'n': 128, 'k': 128},
+            candidates=(...,))                     # autotune search space
+
+Block sizes come from, in priority order: explicit per-call overrides, the
+autotune cache (``results/autotune.json``, path override via
+``REPRO_AUTOTUNE_CACHE``), and the defaults.  When ``REPRO_AUTOTUNE=1`` and
+there is no cache entry for (op, shape, dtype), the candidates are measured
+on the spot with the real arguments and the winner is persisted — ArBB's
+"optimise for the target architecture detected at runtime", made sticky.
+Measurement is skipped under a jax trace (timings there would be
+meaningless) and any candidate that fails to compile is simply dropped.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import threading
+import time
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["round_up", "AutotuneCache", "get_cache", "autotune_enabled",
+           "resolve_blocks", "blocked", "DEFAULT_CACHE_PATH"]
+
+DEFAULT_CACHE_PATH = os.path.join("results", "autotune.json")
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+class AutotuneCache:
+    """JSON-backed block-size cache: key -> {dim: block, '_seconds': t}."""
+
+    def __init__(self, path: Optional[str] = None) -> None:
+        self.path = path or os.environ.get("REPRO_AUTOTUNE_CACHE",
+                                           DEFAULT_CACHE_PATH)
+        self._data: Optional[dict[str, dict]] = None
+        self._lock = threading.Lock()
+
+    @staticmethod
+    def key(op: str, dims: Mapping[str, int], dtype: str) -> str:
+        shape = ",".join(f"{k}={v}" for k, v in sorted(dims.items()))
+        return f"{op}|{shape}|{dtype}"
+
+    def _load(self) -> dict[str, dict]:
+        if self._data is None:
+            try:
+                with open(self.path) as f:
+                    self._data = json.load(f)
+            except (FileNotFoundError, json.JSONDecodeError):
+                self._data = {}
+        return self._data
+
+    def lookup(self, key: str) -> Optional[dict[str, int]]:
+        """The cached blocks for ``key`` (measurement metadata stripped)."""
+        entry = self._load().get(key)
+        if entry is None:
+            return None
+        return {k: int(v) for k, v in entry.items() if not k.startswith("_")}
+
+    def put(self, key: str, blocks: Mapping[str, int],
+            seconds: Optional[float] = None) -> None:
+        with self._lock:
+            data = self._load()
+            entry: dict[str, Any] = {k: int(v) for k, v in blocks.items()}
+            if seconds is not None:
+                entry["_seconds"] = round(seconds, 9)
+            data[key] = entry
+            d = os.path.dirname(self.path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            tmp = f"{self.path}.tmp"
+            with open(tmp, "w") as f:
+                json.dump(data, f, indent=2, sort_keys=True)
+            os.replace(tmp, self.path)
+
+
+_cache: Optional[AutotuneCache] = None
+
+
+def get_cache() -> AutotuneCache:
+    """The process cache, re-opened if ``REPRO_AUTOTUNE_CACHE`` changed
+    (lets tests point it at a temp file)."""
+    global _cache
+    path = os.environ.get("REPRO_AUTOTUNE_CACHE", DEFAULT_CACHE_PATH)
+    if _cache is None or _cache.path != path:
+        _cache = AutotuneCache(path)
+    return _cache
+
+
+def autotune_enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "") in ("1", "true", "measure")
+
+
+def resolve_blocks(
+    op: str,
+    dims: Mapping[str, int],
+    dtype: str,
+    defaults: Mapping[str, int],
+    candidates: Sequence[Mapping[str, int]] = (),
+    measure: Optional[Callable[[Mapping[str, int]], float]] = None,
+) -> dict[str, int]:
+    """Cache hit > fresh measurement (when enabled and possible) > defaults.
+
+    ``measure(blocks) -> seconds`` runs one candidate; pass None when timing
+    is impossible (e.g. under a trace)."""
+    cache = get_cache()
+    key = AutotuneCache.key(op, dims, dtype)
+    hit = cache.lookup(key)
+    if hit is not None:
+        return {**defaults, **hit}
+    if autotune_enabled() and candidates and measure is not None:
+        best: Optional[dict[str, int]] = None
+        best_t = float("inf")
+        for cand in (defaults, *candidates):
+            merged = {**defaults, **cand}
+            try:
+                t = measure(merged)
+            except Exception:
+                continue                  # candidate doesn't compile: skip
+            if t < best_t:
+                best, best_t = merged, t
+        if best is not None:
+            cache.put(key, best, seconds=best_t)
+            return best
+    return dict(defaults)
+
+
+def _dims_of(args: Sequence[Any],
+             pad: Mapping[int, Sequence[Optional[str]]]) -> dict[str, int]:
+    dims: dict[str, int] = {}
+    for i, spec in pad.items():
+        for axis, dname in enumerate(spec):
+            if dname is not None:
+                dims.setdefault(dname, args[i].shape[axis])
+    return dims
+
+
+def _is_tracing(args: Sequence[Any]) -> bool:
+    return any(isinstance(a, jax.core.Tracer) for a in args)
+
+
+def blocked(
+    op: str,
+    inner: Callable,
+    *,
+    pad: Mapping[int, Sequence[Optional[str]]],
+    out: Sequence[Optional[str]],
+    defaults: Mapping[str, int],
+    candidates: Sequence[Mapping[str, int]] = (),
+    measure_iters: int = 2,
+) -> Callable:
+    """Wrap ``inner`` (which demands block-aligned shapes) into a function of
+    unaligned arrays.  See the module docstring for the spec."""
+    pad = {i: tuple(spec) for i, spec in pad.items()}
+    out = tuple(out)
+    defaults = dict(defaults)
+
+    @functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+    def padded_call(*args, blocks, interpret):
+        bl = dict(blocks)
+        dims = _dims_of(args, pad)
+        padded = []
+        for i, a in enumerate(args):
+            spec = pad.get(i)
+            if spec is None:
+                padded.append(a)
+                continue
+            widths = [(0, 0) if d is None
+                      else (0, round_up(a.shape[ax], bl[d]) - a.shape[ax])
+                      for ax, d in enumerate(spec)]
+            padded.append(jnp.pad(a, widths))
+        res = inner(*padded, blocks=bl, interpret=interpret)
+        sl = tuple(slice(None) if d is None else slice(0, dims[d])
+                   for d in out)
+        return res[sl]
+
+    def _measure(args, interpret):
+        def run(blocks: Mapping[str, int]) -> float:
+            key = tuple(sorted(blocks.items()))
+            jax.block_until_ready(
+                padded_call(*args, blocks=key, interpret=interpret))
+            t0 = time.perf_counter()
+            for _ in range(measure_iters):
+                r = padded_call(*args, blocks=key, interpret=interpret)
+            jax.block_until_ready(r)
+            return (time.perf_counter() - t0) / measure_iters
+        return run
+
+    def wrapped(*args, interpret: bool = False,
+                overrides: Optional[Mapping[str, Optional[int]]] = None):
+        pinned = {k: int(v) for k, v in (overrides or {}).items()
+                  if v is not None}
+        if set(pinned) >= set(defaults):
+            bl = pinned                  # fully pinned: nothing to resolve
+        else:
+            dims = _dims_of(args, pad)
+            measure = None if _is_tracing(args) else _measure(args, interpret)
+            bl = resolve_blocks(op, dims, str(args[0].dtype), defaults,
+                                candidates, measure)
+            bl.update(pinned)
+        return padded_call(*args, blocks=tuple(sorted(bl.items())),
+                           interpret=interpret)
+
+    wrapped.padded_call = padded_call
+    return wrapped

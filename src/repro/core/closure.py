@@ -26,7 +26,7 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import execlevel, sharding as shrules
+from repro.core import compat, execlevel, sharding as shrules
 from repro.core.containers import Dense, unwrap
 
 __all__ = ["call", "capture", "emap", "Closure", "CallClosure"]
@@ -88,8 +88,10 @@ class CallClosure:
     """The object returned by ``call(f)``.
 
     Invocation JIT-compiles ``f`` for the *current execution level* and caches
-    the compiled executable per (level, mesh) — mirroring how ArBB re-optimises
-    the captured IR "for the target architecture detected at runtime".
+    the compiled executable per (level, mesh, kernel plane) — consulting
+    :mod:`repro.core.registry` for the resolved backend plane, mirroring how
+    ArBB re-optimises the captured IR "for the target architecture detected
+    at runtime".
     At O3/O4 the arguments are placed with rank-heuristic shardings
     (:mod:`repro.core.sharding`) before dispatch, so XLA partitions the
     computation across the mesh without any change to the program text.
@@ -100,17 +102,25 @@ class CallClosure:
         self.static_argnums = tuple(static_argnums)
         self._jitted: dict[Any, Callable] = {}
 
-    def _get_executable(self, mesh_key) -> Callable:
-        if mesh_key not in self._jitted:
-            self._jitted[mesh_key] = jax.jit(
+    def _get_executable(self, key) -> Callable:
+        if key not in self._jitted:
+            self._jitted[key] = jax.jit(
                 _dense_transparent(self.fn), static_argnums=self.static_argnums
             )
-        return self._jitted[mesh_key]
+        return self._jitted[key]
+
+    def _retarget_key(self, ctx, mesh) -> tuple:
+        """One executable per (level, mesh, kernel plane): retracing when the
+        registry would resolve kernel ops differently keeps a compiled
+        closure from baking in a stale variant choice."""
+        from repro.core import registry
+        return (ctx.level, id(mesh) if mesh is not None else None,
+                registry.resolve_backend())
 
     def __call__(self, *args: Any):
         ctx = execlevel.current()
         if not ctx.is_distributed:
-            return self._get_executable(None)(*args)
+            return self._get_executable(self._retarget_key(ctx, None))(*args)
         mesh = ctx.mesh
         placed = []
         for i, a in enumerate(args):
@@ -121,8 +131,8 @@ class CallClosure:
             sh = shrules.auto_sharding(arr.shape, mesh)
             arr = jax.device_put(arr, sh)
             placed.append(Dense(arr) if isinstance(a, Dense) else arr)
-        with jax.sharding.set_mesh(mesh):
-            return self._get_executable((id(mesh),))(*placed)
+        with compat.set_mesh(mesh):
+            return self._get_executable(self._retarget_key(ctx, mesh))(*placed)
 
     def lower(self, *args: Any):
         """AOT-lower without executing (feeds the dry-run/roofline path)."""

@@ -1,0 +1,75 @@
+"""JAX version compatibility shims.
+
+The repo tracks the current jax API (``jax.sharding.set_mesh``,
+``jax.sharding.AxisType``, ``pallas.tpu.CompilerParams``); the pinned
+container ships an older jax where those spell differently or don't exist.
+Every version-sensitive call site goes through this module so the skew lives
+in exactly one place.
+
+Covered:
+
+    tpu_compiler_params(**kw)   pltpu.CompilerParams | pltpu.TPUCompilerParams
+    set_mesh(mesh)              jax.sharding.set_mesh | the Mesh context
+                                manager (which sets the thread-resource env
+                                older jax reads)
+    get_abstract_mesh()         jax.sharding.get_abstract_mesh | the active
+                                physical mesh from thread resources
+    make_mesh(shape, axes)      jax.make_mesh with axis_types only where the
+                                kwarg exists
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence
+
+import jax
+
+__all__ = ["tpu_compiler_params", "set_mesh", "get_abstract_mesh",
+           "make_mesh"]
+
+
+def tpu_compiler_params(**kwargs):
+    """Mosaic compiler params under whichever name this jax exports.
+
+    pltpu is imported lazily so that `import repro.core` (solvers, models,
+    serving) never requires the Pallas-TPU extras to be importable."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
+
+if hasattr(jax.sharding, "set_mesh"):
+
+    def set_mesh(mesh):
+        return jax.sharding.set_mesh(mesh)
+
+else:
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        # Entering the Mesh populates jax's thread-resource env, which is
+        # what get_abstract_mesh() below reads back on this jax version.
+        with mesh:
+            yield mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or an empty mesh when none is active."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, devices=None) -> jax.sharding.Mesh:
+    """jax.make_mesh with explicit-Auto axis types where supported."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

@@ -1,0 +1,265 @@
+"""Unified operator registry: one retargeting plane for ExecLevel × backend.
+
+The paper's defining property is that *the program text never changes* —
+ArBB retargets the same source at runtime via ``ARBB_OPT_LEVEL`` /
+``ARBB_NUM_CORES`` (paper §3).  This module is that property, generalised:
+every operator (``matmul``, ``spmv_ell``, ``fft``, ``flash_attention``, the
+solver SpMV formulations, ...) registers *variants*, and a single
+:func:`dispatch` picks one from the ambient :class:`~repro.core.execlevel.
+ExecContext`, the hardware platform, and the requested backend plane.
+
+Vocabulary (DESIGN.md §1):
+
+    plane     a retargeting plane — how a kernel body executes:
+              'pallas' (Mosaic-compiled, TPU), 'interpret' (pallas_call in
+              interpret mode, the test harness), 'xla' (pure-jnp reference).
+              The plane knob is ``use_backend()`` / the ``REPRO_KERNELS``
+              env var — the ArBB_OPT_LEVEL of the kernel layer.
+    variant   (op, name, impl, plane?, available?, accepts?, cost) — one
+              implementation of an op.  DSL-level variants (e.g. the solver
+              SpMV formulations spmv1/spmv2/ell/dia) have ``plane=None``:
+              they are jnp programs and run under any plane.
+    available(ctx)     capability predicate over (ExecLevel, mesh, platform)
+    accepts(*args)     per-call predicate over concrete arguments (shapes,
+                       layouts) — e.g. the DIA formulation only accepts DIA
+                       matrices, flash kernels need block-divisible lengths
+    cost      static preference hint; lower wins among admissible variants
+
+Selection rules (DESIGN.md §6):
+
+    1. ``dispatch(op, ..., variant=name)`` — explicit, always honoured.
+    2. Otherwise variants are ordered (requested-plane-first, cost, name)
+       and the first one that is *available* on this context AND *accepts*
+       the arguments wins.
+    3. A requested plane that is unavailable (e.g. 'pallas' off-TPU)
+       degrades gracefully: selection falls through to the best available
+       variant — the same program text, retargeted.
+
+Providers register lazily: ops are declared here by module path and imported
+on first dispatch, so upper layers (models, serve) depend only on this
+module, never on kernel modules.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import importlib
+import os
+import threading
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+
+from repro.core import execlevel
+
+__all__ = ["Variant", "SelectContext", "OperatorRegistry", "REGISTRY",
+           "select_context",
+           "register", "unregister", "dispatch", "select", "variants", "ops",
+           "use_backend", "requested_backend", "resolve_backend", "PLANES"]
+
+#: The kernel retargeting planes (ordered by preference on TPU).
+PLANES = ("pallas", "interpret", "xla")
+
+#: op name -> module that registers its variants on import.
+_PROVIDERS = {
+    "matmul": "repro.kernels.ops",
+    "spmv_ell": "repro.kernels.ops",
+    "spmv_dia": "repro.kernels.ops",
+    "fft": "repro.kernels.ops",
+    "flash_attention": "repro.kernels.ops",
+    "solver_spmv": "repro.numerics.spmv",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectContext:
+    """What variant selection may look at: level × mesh × hardware."""
+    level: execlevel.ExecLevel
+    mesh: Optional[Any]
+    platform: str           # jax.default_backend(): 'tpu' | 'cpu' | 'gpu'
+
+
+def select_context() -> SelectContext:
+    """The context variant selection sees right now."""
+    ctx = execlevel.current()
+    return SelectContext(level=ctx.level, mesh=ctx.mesh,
+                         platform=jax.default_backend())
+
+
+def _plane_available(plane: Optional[str], ctx: SelectContext) -> bool:
+    if plane == "pallas":
+        return ctx.platform == "tpu"
+    return True          # 'interpret', 'xla', and DSL-level (None) run anywhere
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    op: str
+    name: str
+    impl: Callable
+    plane: Optional[str] = None
+    cost: float = 10.0
+    available: Optional[Callable[[SelectContext], bool]] = None
+    accepts: Optional[Callable[..., bool]] = None
+    doc: str = ""
+
+    def is_available(self, ctx: SelectContext) -> bool:
+        if not _plane_available(self.plane, ctx):
+            return False
+        return self.available(ctx) if self.available is not None else True
+
+    def matches(self, *args: Any, **kwargs: Any) -> bool:
+        return self.accepts(*args, **kwargs) if self.accepts is not None \
+            else True
+
+
+# ---------------------------------------------------------------------------
+# requested backend plane (the scoped ARBB_OPT_LEVEL of the kernel layer)
+# ---------------------------------------------------------------------------
+
+_state = threading.local()
+
+
+def requested_backend() -> Optional[str]:
+    """The explicitly requested plane (context manager beats env), if any.
+
+    A mistyped ``REPRO_KERNELS`` fails loudly here rather than silently
+    running the default plane."""
+    req = getattr(_state, "plane", None)
+    if req is not None:
+        return req
+    env = os.environ.get("REPRO_KERNELS") or None
+    if env is not None and env not in PLANES:
+        raise ValueError(f"REPRO_KERNELS={env!r} is not a backend plane; "
+                         f"choose from {PLANES}")
+    return env
+
+
+@contextlib.contextmanager
+def use_backend(name: str) -> Iterator[str]:
+    """Scoped plane request.  ``repro.kernels.ops.backend`` is this."""
+    if name not in PLANES:
+        raise ValueError(f"unknown backend plane {name!r}; choose from {PLANES}")
+    prev = getattr(_state, "plane", None)
+    _state.plane = name
+    try:
+        yield name
+    finally:
+        _state.plane = prev
+
+
+def resolve_backend() -> str:
+    """The plane dispatch will favour right now: the requested plane when it
+    is available on this hardware, else the platform default ('pallas' on
+    TPU, 'xla' elsewhere).  A 'pallas' request off-TPU resolves to 'xla'."""
+    ctx = select_context()
+    req = requested_backend()
+    if req in PLANES and _plane_available(req, ctx):
+        return req
+    return "pallas" if ctx.platform == "tpu" else "xla"
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+class OperatorRegistry:
+    def __init__(self) -> None:
+        self._ops: dict[str, dict[str, Variant]] = {}
+        self._lock = threading.Lock()
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, op: str, name: str, impl: Optional[Callable] = None, *,
+                 plane: Optional[str] = None, cost: float = 10.0,
+                 available: Optional[Callable[[SelectContext], bool]] = None,
+                 accepts: Optional[Callable[..., bool]] = None,
+                 doc: str = ""):
+        """Register a variant.  Usable directly or as a decorator."""
+        if impl is None:
+            def deco(fn: Callable) -> Callable:
+                self.register(op, name, fn, plane=plane, cost=cost,
+                              available=available, accepts=accepts, doc=doc)
+                return fn
+            return deco
+        if plane is not None and plane not in PLANES:
+            raise ValueError(f"unknown plane {plane!r} for {op}/{name}")
+        with self._lock:
+            table = self._ops.setdefault(op, {})
+            if name in table:
+                raise ValueError(
+                    f"duplicate variant {name!r} for op {op!r}; "
+                    f"unregister it first to replace")
+            table[name] = Variant(op=op, name=name, impl=impl, plane=plane,
+                                  cost=cost, available=available,
+                                  accepts=accepts, doc=doc or impl.__doc__
+                                  or "")
+        return impl
+
+    def unregister(self, op: str, name: Optional[str] = None) -> None:
+        """Drop one variant, or the whole op when ``name`` is None."""
+        with self._lock:
+            if name is None:
+                self._ops.pop(op, None)
+            else:
+                self._ops.get(op, {}).pop(name, None)
+
+    # -- lookup -------------------------------------------------------------
+
+    def _table(self, op: str) -> dict[str, Variant]:
+        if op not in self._ops and op in _PROVIDERS:
+            importlib.import_module(_PROVIDERS[op])
+        if op not in self._ops:
+            raise LookupError(f"unknown op {op!r}; registered: "
+                              f"{sorted(self._ops)}")
+        return self._ops[op]
+
+    def ops(self) -> list[str]:
+        return sorted(set(self._ops) | set(_PROVIDERS))
+
+    def variants(self, op: str) -> tuple[Variant, ...]:
+        return tuple(sorted(self._table(op).values(),
+                            key=lambda v: (v.cost, v.name)))
+
+    def get(self, op: str, name: str) -> Variant:
+        table = self._table(op)
+        if name not in table:
+            raise ValueError(f"op {op!r} has no variant {name!r}; "
+                             f"registered: {sorted(table)}")
+        return table[name]
+
+    def select(self, op: str, *args: Any, variant: Optional[str] = None,
+               **kwargs: Any) -> Variant:
+        """Pick the variant :func:`dispatch` would run (without running it)."""
+        if variant is not None:
+            return self.get(op, variant)
+        ctx = select_context()
+        req = requested_backend()
+        ranked = sorted(
+            self._table(op).values(),
+            key=lambda v: (0 if (req is not None and v.plane == req) else 1,
+                           v.cost, v.name))
+        for v in ranked:
+            if v.is_available(ctx) and v.matches(*args, **kwargs):
+                return v
+        raise LookupError(
+            f"no variant of op {op!r} is available for platform "
+            f"{ctx.platform!r} and these arguments; registered: "
+            f"{[v.name for v in ranked]}")
+
+    def dispatch(self, op: str, *args: Any, variant: Optional[str] = None,
+                 **kwargs: Any) -> Any:
+        """Select (per the module docstring's rules) and invoke."""
+        return self.select(op, *args, variant=variant, **kwargs).impl(
+            *args, **kwargs)
+
+
+#: Process-global registry instance — the single retargeting plane.
+REGISTRY = OperatorRegistry()
+
+register = REGISTRY.register
+unregister = REGISTRY.unregister
+dispatch = REGISTRY.dispatch
+select = REGISTRY.select
+variants = REGISTRY.variants
+ops = REGISTRY.ops

@@ -13,14 +13,16 @@ from typing import Any, Optional, Sequence
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import compat
+
 __all__ = ["active_mesh", "batch_axes", "bspec", "constrain", "spec",
            "named", "MODEL"]
 
 MODEL = "model"
 
 
-def active_mesh() -> Optional[jax.sharding.AbstractMesh]:
-    m = jax.sharding.get_abstract_mesh()
+def active_mesh() -> Optional[Any]:
+    m = compat.get_abstract_mesh()
     return None if m is None or m.empty else m
 
 

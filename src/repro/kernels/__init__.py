@@ -4,7 +4,8 @@
     spmv.py             block-ELL + DIA SpMV        (mod2as, TPU-adapted)
     fft.py              split-stream butterfly stage (mod2f)
     flash_attention.py  online-softmax attention    (beyond-paper, LM archs)
-    ops.py              jit'd wrappers + backend dispatch (pallas/interpret/xla)
+    ops.py              jit'd wrappers; variants registered with
+                        repro.core.registry (pallas/interpret/xla planes)
     ref.py              pure-jnp oracles
 """
 from repro.kernels import ops, ref  # noqa: F401

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import compat
+
 __all__ = ["fft_stage_kernel", "fft_stage"]
 
 
@@ -86,7 +88,7 @@ def fft_stage(
             pl.BlockSpec((2, block), lambda c: (0, c)),
         ],
         out_shape=out_shape,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

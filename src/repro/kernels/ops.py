@@ -1,6 +1,8 @@
-"""jit'd public entry points for the Pallas kernels, with backend dispatch.
+"""jit'd public entry points for the Pallas kernels.
 
-Backend policy (``repro.kernels.ops.backend`` context / ``REPRO_KERNELS`` env):
+All variant selection flows through :mod:`repro.core.registry` — this module
+only *registers* one variant per retargeting plane for each op and keeps the
+thin public wrappers.  The planes (``repro.core.registry.PLANES``):
 
     'pallas'     pl.pallas_call compiled for TPU (production)
     'interpret'  pl.pallas_call(interpret=True) — kernel body executed on CPU,
@@ -9,18 +11,25 @@ Backend policy (``repro.kernels.ops.backend`` context / ``REPRO_KERNELS`` env):
                  multi-pod dry-run lowers, so cost_analysis reflects the XLA
                  collectives/fusions rather than opaque custom-calls
 
-Default: 'pallas' on TPU, 'xla' elsewhere.
+``backend(name)`` / the ``REPRO_KERNELS`` env var request a plane;
+resolution (including the pallas-off-TPU -> xla fallback) is the registry's
+job.  Default: 'pallas' on TPU, 'xla' elsewhere.
+
+Pad-to-block/unpad is the :func:`repro.core.blocking.blocked` combinator;
+block sizes come from the autotune cache (``results/autotune.json``) instead
+of hardcoded 128s, with explicit per-call overrides still honoured.
 """
 from __future__ import annotations
 
-import contextlib
 import functools
-import os
-import threading
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import registry
+from repro.core.blocking import blocked, resolve_blocks
+from repro.core.registry import (use_backend as backend,          # noqa: F401
+                                 resolve_backend as current_backend)
 from repro.kernels import fft as fft_k
 from repro.kernels import flash_attention as fa_k
 from repro.kernels import matmul as mm_k
@@ -31,102 +40,137 @@ from repro.numerics.fft import bitrev_permutation, split_stream_twiddles
 __all__ = ["backend", "current_backend", "matmul", "spmv_ell", "spmv_dia",
            "fft", "flash_attention"]
 
-_state = threading.local()
-
-
-def _default_backend() -> str:
-    env = os.environ.get("REPRO_KERNELS")
-    if env:
-        return env
-    return "pallas" if jax.default_backend() == "tpu" else "xla"
-
-
-def current_backend() -> str:
-    return getattr(_state, "backend", None) or _default_backend()
-
-
-@contextlib.contextmanager
-def backend(name: str):
-    assert name in ("pallas", "interpret", "xla"), name
-    prev = getattr(_state, "backend", None)
-    _state.backend = name
-    try:
-        yield
-    finally:
-        _state.backend = prev
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
-
 
 # ---------------------------------------------------------------------------
 # matmul
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
-                                             "kernel_backend"))
-def _matmul_impl(a, b, block_m, block_n, block_k, kernel_backend):
-    if kernel_backend == "xla":
-        return ref.matmul_ref(a, b)
-    m, k = a.shape
-    _, n = b.shape
-    mp, kp, np_ = _round_up(m, block_m), _round_up(k, block_k), _round_up(n, block_n)
-    ap = jnp.pad(a, ((0, mp - m), (0, kp - k)))
-    bp = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
-    out = mm_k.matmul(ap, bp, block_m=block_m, block_n=block_n,
-                      block_k=block_k, interpret=(kernel_backend == "interpret"))
-    return out[:m, :n]
+def _matmul_inner(a, b, *, blocks, interpret):
+    return mm_k.matmul(a, b, block_m=blocks["m"], block_n=blocks["n"],
+                       block_k=blocks["k"], interpret=interpret)
 
 
-def matmul(a, b, *, block_m=128, block_n=128, block_k=128):
-    """Blocked matmul (pads to block multiples; f32 accumulation)."""
-    return _matmul_impl(a, b, block_m, block_n, block_k, current_backend())
+_matmul_blocked = blocked(
+    "matmul", _matmul_inner,
+    pad={0: ("m", "k"), 1: ("k", "n")}, out=("m", "n"),
+    defaults={"m": 128, "n": 128, "k": 128},
+    candidates=({"m": 256, "n": 256}, {"m": 64, "n": 64, "k": 64},
+                {"k": 256}, {"m": 256, "k": 64}),
+)
+
+
+def _mm_overrides(block_m, block_n, block_k):
+    return {"m": block_m, "n": block_n, "k": block_k}
+
+
+@registry.register("matmul", "pallas", plane="pallas", cost=1.0,
+                   doc="blocked MXU kernel (kernels/matmul.py)")
+def _matmul_pallas(a, b, *, block_m=None, block_n=None, block_k=None):
+    return _matmul_blocked(a, b, interpret=False,
+                           overrides=_mm_overrides(block_m, block_n, block_k))
+
+
+@registry.register("matmul", "interpret", plane="interpret", cost=100.0,
+                   doc="same kernel, interpret mode (CPU validation)")
+def _matmul_interpret(a, b, *, block_m=None, block_n=None, block_k=None):
+    return _matmul_blocked(a, b, interpret=True,
+                           overrides=_mm_overrides(block_m, block_n, block_k))
+
+
+_matmul_ref_jit = jax.jit(ref.matmul_ref)
+
+
+@registry.register("matmul", "xla", plane="xla", cost=2.0,
+                   doc="pure-jnp reference (XLA dot)")
+def _matmul_xla(a, b, *, block_m=None, block_n=None, block_k=None):
+    return _matmul_ref_jit(a, b)
+
+
+def matmul(a, b, *, block_m=None, block_n=None, block_k=None):
+    """Blocked matmul (pads to block multiples; f32 accumulation).
+
+    Block sizes default to the autotuned/cached values; pass them explicitly
+    to pin a configuration."""
+    return registry.dispatch("matmul", a, b, block_m=block_m,
+                             block_n=block_n, block_k=block_k)
 
 
 # ---------------------------------------------------------------------------
-# SpMV
+# SpMV (ELL + DIA layouts)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("kernel_backend",))
-def _spmv_ell_impl(values, cols, x, kernel_backend):
-    if kernel_backend == "xla":
-        return ref.spmv_ell_ref(values, cols, x)
-    nrows, width = values.shape
-    br, bw = 8, 128
-    nr, wp = _round_up(nrows, br), _round_up(width, bw)
-    vp = jnp.pad(values, ((0, nr - nrows), (0, wp - width)))
-    cp = jnp.pad(cols, ((0, nr - nrows), (0, wp - width)))
-    out = spmv_k.spmv_ell(vp, cp, x, interpret=(kernel_backend == "interpret"))
-    return out[:nrows]
+def _ell_inner(values, cols, x, *, blocks, interpret):
+    return spmv_k.spmv_ell(values, cols, x, block_rows=blocks["rows"],
+                           block_width=blocks["width"], interpret=interpret)
+
+
+_ell_blocked = blocked(
+    "spmv_ell", _ell_inner,
+    pad={0: ("rows", "width"), 1: ("rows", "width")}, out=("rows",),
+    defaults={"rows": 8, "width": 128},
+    candidates=({"rows": 16}, {"rows": 32}, {"width": 256}),
+)
+
+
+@registry.register("spmv_ell", "pallas", plane="pallas", cost=1.0,
+                   doc="padded block-ELL kernel (kernels/spmv.py)")
+def _spmv_ell_pallas(values, cols, x):
+    return _ell_blocked(values, cols, x, interpret=False)
+
+
+@registry.register("spmv_ell", "interpret", plane="interpret", cost=100.0)
+def _spmv_ell_interpret(values, cols, x):
+    return _ell_blocked(values, cols, x, interpret=True)
+
+
+_spmv_ell_ref_jit = jax.jit(ref.spmv_ell_ref)
+
+
+@registry.register("spmv_ell", "xla", plane="xla", cost=2.0,
+                   doc="gather + row-reduce reference")
+def _spmv_ell_xla(values, cols, x):
+    return _spmv_ell_ref_jit(values, cols, x)
 
 
 def spmv_ell(values, cols, x):
-    return _spmv_ell_impl(values, cols, x, current_backend())
+    return registry.dispatch("spmv_ell", values, cols, x)
 
 
-@functools.partial(jax.jit, static_argnames=("offsets", "kernel_backend"))
-def _spmv_dia_impl(diags, offsets, x, kernel_backend):
-    if kernel_backend == "xla":
-        return ref.spmv_dia_ref(diags, offsets, x)
-    return spmv_k.spmv_dia(diags, offsets, x,
-                           interpret=(kernel_backend == "interpret"))
+@functools.partial(jax.jit, static_argnames=("offsets", "interpret"))
+def _spmv_dia_impl(diags, offsets, x, interpret):
+    return spmv_k.spmv_dia(diags, offsets, x, interpret=interpret)
+
+
+@registry.register("spmv_dia", "pallas", plane="pallas", cost=1.0,
+                   doc="banded shifted-FMA kernel, gather-free")
+def _spmv_dia_pallas(diags, offsets, x):
+    return _spmv_dia_impl(diags, offsets, x, interpret=False)
+
+
+@registry.register("spmv_dia", "interpret", plane="interpret", cost=100.0)
+def _spmv_dia_interpret(diags, offsets, x):
+    return _spmv_dia_impl(diags, offsets, x, interpret=True)
+
+
+_spmv_dia_ref_jit = jax.jit(ref.spmv_dia_ref, static_argnames=("offsets",))
+
+
+@registry.register("spmv_dia", "xla", plane="xla", cost=2.0)
+def _spmv_dia_xla(diags, offsets, x):
+    return _spmv_dia_ref_jit(diags, offsets, x)
 
 
 def spmv_dia(diags, offsets, x):
-    return _spmv_dia_impl(diags, tuple(offsets), x, current_backend())
+    return registry.dispatch("spmv_dia", diags, tuple(offsets), x)
 
 
 # ---------------------------------------------------------------------------
 # FFT (full transform = tangle + log2(n) fused stage kernels)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("kernel_backend",))
-def _fft_impl(x, kernel_backend):
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fft_stages(x, interpret):
     n = x.shape[0]
-    x = x.astype(jnp.complex64) if x.dtype != jnp.complex128 else x
-    if kernel_backend == "xla":
-        return ref.fft_ref(x)
     rdtype = jnp.float64 if x.dtype == jnp.complex128 else jnp.float32
     perm = bitrev_permutation(n)
     tw = split_stream_twiddles(n)
@@ -135,42 +179,138 @@ def _fft_impl(x, kernel_backend):
     data = x[perm]
     re, im = jnp.real(data).astype(rdtype), jnp.imag(data).astype(rdtype)
     m, i = n // 2, 1
-    interp = kernel_backend == "interpret"
     while i < n:
         stage_tw_re = jnp.tile(tw_re[:m], i)
         stage_tw_im = jnp.tile(tw_im[:m], i)
         ore, oim = fft_k.fft_stage(re.reshape(n // 2, 2), im.reshape(n // 2, 2),
-                                   stage_tw_re, stage_tw_im, interpret=interp)
+                                   stage_tw_re, stage_tw_im,
+                                   interpret=interpret)
         re, im = ore.reshape(n), oim.reshape(n)
         m >>= 1
         i <<= 1
     return (re + 1j * im).astype(x.dtype)
 
 
+def _pow2(n: int) -> bool:
+    return n >= 2 and (n & (n - 1)) == 0
+
+
+def _fft_accepts(x):
+    return _pow2(x.shape[0])
+
+
+@registry.register("fft", "pallas", plane="pallas", cost=1.0,
+                   accepts=_fft_accepts,
+                   doc="split-stream butterfly stages (kernels/fft.py)")
+def _fft_pallas(x):
+    return _fft_stages(x, interpret=False)
+
+
+@registry.register("fft", "interpret", plane="interpret", cost=100.0,
+                   accepts=_fft_accepts)
+def _fft_interpret(x):
+    return _fft_stages(x, interpret=True)
+
+
+_fft_ref_jit = jax.jit(ref.fft_ref)
+
+
+@registry.register("fft", "xla", plane="xla", cost=2.0,
+                   doc="jnp.fft reference")
+def _fft_xla(x):
+    return _fft_ref_jit(x)
+
+
 def fft(x):
     """1-D complex FFT, split-stream stages (power-of-two length)."""
-    return _fft_impl(x, current_backend())
+    x = x.astype(jnp.complex64) if x.dtype != jnp.complex128 else x
+    return registry.dispatch("fft", x)
 
 
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 
+_FA_DEFAULTS = {"q": 128, "k": 128}
+_FA_CANDIDATES = ({"q": 256}, {"k": 256}, {"q": 256, "k": 256},
+                  {"q": 64, "k": 64})
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
-                                             "kernel_backend"))
-def _attn_impl(q, k, v, causal, block_q, block_k, kernel_backend):
-    if kernel_backend == "xla":
-        # long sequences: stream over KV blocks (flash schedule at the XLA
-        # level) instead of materialising (B, H, Lq, Lk) scores — §Perf
-        # iteration 2; short sequences keep the transparent oracle
-        if k.shape[2] >= 4096 and k.shape[2] % 1024 == 0:
-            return ref.attention_chunked(q, k, v, causal=causal,
-                                         block_kv=1024)
-        return ref.attention_ref(q, k, v, causal=causal)
+                                             "interpret"))
+def _fa_impl(q, k, v, causal, block_q, block_k, interpret):
     return fa_k.flash_attention(q, k, v, causal=causal, block_q=block_q,
-                                block_k=block_k,
-                                interpret=(kernel_backend == "interpret"))
+                                block_k=block_k, interpret=interpret)
 
 
-def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
-    return _attn_impl(q, k, v, causal, block_q, block_k, current_backend())
+def _fa_accepts(q, k, v, *, causal=True, block_q=None, block_k=None):
+    """The kernel needs grouped heads and block-divisible sequence lengths
+    (blocks are clamped to the sequence, so short sequences always fit)."""
+    lq, lk = q.shape[2], k.shape[2]
+    bq = min(block_q or _FA_DEFAULTS["q"], lq)
+    bk = min(block_k or _FA_DEFAULTS["k"], lk)
+    return (q.shape[1] % k.shape[1] == 0 and lq % bq == 0 and lk % bk == 0)
+
+
+def _fa_kernel_variant(interpret):
+    def impl(q, k, v, *, causal=True, block_q=None, block_k=None):
+        if block_q is not None and block_k is not None:   # fully pinned
+            return _fa_impl(q, k, v, causal, block_q, block_k, interpret)
+        dims = {"b": q.shape[0], "h": q.shape[1], "lq": q.shape[2],
+                "lk": k.shape[2], "d": q.shape[3]}
+        measure = None
+        if not isinstance(q, jax.core.Tracer):
+            def measure(bl):
+                import time as _t
+                out = _fa_impl(q, k, v, causal, bl["q"], bl["k"], interpret)
+                jax.block_until_ready(out)
+                t0 = _t.perf_counter()
+                jax.block_until_ready(
+                    _fa_impl(q, k, v, causal, bl["q"], bl["k"], interpret))
+                return _t.perf_counter() - t0
+        bl = resolve_blocks("flash_attention", dims, str(q.dtype),
+                            _FA_DEFAULTS, _FA_CANDIDATES, measure)
+        bq = block_q or bl["q"]
+        bk = block_k or bl["k"]
+        return _fa_impl(q, k, v, causal, bq, bk, interpret)
+    return impl
+
+
+registry.register("flash_attention", "pallas", _fa_kernel_variant(False),
+                  plane="pallas", cost=1.0, accepts=_fa_accepts,
+                  doc="online-softmax GQA kernel (kernels/flash_attention.py)")
+registry.register("flash_attention", "interpret", _fa_kernel_variant(True),
+                  plane="interpret", cost=100.0, accepts=_fa_accepts)
+
+
+_attn_ref_jit = jax.jit(ref.attention_ref, static_argnames=("causal",))
+
+
+@registry.register("flash_attention", "xla", plane="xla", cost=2.0,
+                   doc="materialising oracle (short sequences)")
+def _attn_xla(q, k, v, *, causal=True, block_q=None, block_k=None):
+    return _attn_ref_jit(q, k, v, causal=causal)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_kv"))
+def _attn_chunked_jit(q, k, v, causal, block_kv):
+    return ref.attention_chunked(q, k, v, causal=causal, block_kv=block_kv)
+
+
+def _chunked_accepts(q, k, v, *, causal=True, block_q=None, block_k=None):
+    # long sequences: stream over KV blocks (flash schedule at the XLA
+    # level) instead of materialising (B, H, Lq, Lk) scores — §Perf
+    # iteration 2; short sequences keep the transparent oracle
+    return k.shape[2] >= 4096 and k.shape[2] % 1024 == 0
+
+
+@registry.register("flash_attention", "xla_chunked", plane="xla", cost=1.5,
+                   accepts=_chunked_accepts,
+                   doc="KV-streamed flash schedule at the XLA level")
+def _attn_xla_chunked(q, k, v, *, causal=True, block_q=None, block_k=None):
+    return _attn_chunked_jit(q, k, v, causal, 1024)
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=None, block_k=None):
+    return registry.dispatch("flash_attention", q, k, v, causal=causal,
+                             block_q=block_q, block_k=block_k)

@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import compat
+
 __all__ = ["spmv_ell_kernel", "spmv_ell", "spmv_dia_kernel", "spmv_dia"]
 
 
@@ -76,7 +78,7 @@ def spmv_ell(
         ],
         out_specs=pl.BlockSpec((block_rows,), lambda i, w: (i,)),
         out_shape=jax.ShapeDtypeStruct((nrows,), values.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import compat
 from repro.configs import get_config, list_configs
 from repro.configs.base import ModelConfig
 from repro.distributed.partition import (param_specs, data_axes, zero1_specs,
@@ -221,7 +222,7 @@ def run_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
     else:
         jitted, args = build_decode(cfg, mesh, shape)
 
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0
         t0 = time.time()
@@ -283,7 +284,7 @@ def _probe_cost(cfg: ModelConfig, shape: ShapeSpec, mesh, depth: int,
         jitted, args = build_prefill(sub, mesh, shape)
     else:
         jitted, args = build_decode(sub, mesh, shape)
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         compiled = jitted.lower(*args).compile()
     ca = compiled.cost_analysis()
     if not isinstance(ca, dict):

@@ -19,26 +19,22 @@ from typing import Optional
 import jax
 from jax.sharding import Mesh
 
+from repro.core import compat
+
 __all__ = ["make_production_mesh", "make_mesh", "describe"]
-
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(data: int = 1, model: int = 1, pod: Optional[int] = None) -> Mesh:
     """Arbitrary mesh for tests/smokes (sized to available devices)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=_auto(3))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+        return compat.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def describe(mesh: Mesh) -> str:

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compat
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
@@ -133,7 +134,7 @@ class Trainer:
         history = []
         start = int(jax.device_get(self.state.step))
         t0 = time.time()
-        ctx = jax.sharding.set_mesh(self.mesh) if self.mesh is not None \
+        ctx = compat.set_mesh(self.mesh) if self.mesh is not None \
             else _nullcontext()
         with ctx:
             for i in range(start, steps):

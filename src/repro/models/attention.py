@@ -14,7 +14,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops as kops
+from repro.core.registry import dispatch
 from repro.models.layers import (apply_rope, dense_init, linear, rms_norm,
                                  rms_norm_init, rope)
 
@@ -74,7 +74,8 @@ def attention_apply_kv(x: jax.Array, p: Params, cfg, cos, sin
     q, k, v = _project_qkv(x, p, cfg)
     q, k = _rope_qk(q, k, cos, sin, cfg)
     v = v.transpose(0, 2, 1, 3)
-    out = kops.flash_attention(q, k, v, causal=True)      # (B, H, L, D)
+    # registry-dispatched: flash kernel on TPU, chunked/oracle XLA elsewhere
+    out = dispatch("flash_attention", q, k, v, causal=True)  # (B, H, L, D)
     out = out.transpose(0, 2, 1, 3).reshape(B, L, cfg.num_heads * cfg.head_dim)
     return linear(out, p["wo"].astype(x.dtype)), k, v
 

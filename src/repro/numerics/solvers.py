@@ -4,46 +4,56 @@
 The CG port is the paper's listing, line for line, on the DSL: the iteration
 is a recorded ``_while`` whose condition is ``r2 > stop && k < max_iters`` and
 whose body composes the SpMV kernel with ``add_reduce`` dot products.  The
-SpMV backend is pluggable — the paper runs arbb_spmv1/arbb_spmv2; we add the
-TPU-native DIA path for the banded Table-2 systems (gather-free; DESIGN.md §2).
+SpMV formulation is a registry variant (``solver_spmv`` in
+:mod:`repro.core.registry`) — the paper runs arbb_spmv1/arbb_spmv2; we add
+the TPU-native DIA path for the banded Table-2 systems (gather-free;
+DESIGN.md §2).  ``backend=None`` auto-selects the strongest formulation the
+matrix layout admits.
+
+``cg_solve`` keeps the whole iteration on device: the returned
+:class:`CGResult` carries device scalars for the iteration count and final
+residual, so composing solves (or jitting around them) never forces a host
+sync — convert with ``int()`` / ``float()`` at the edge where a Python value
+is genuinely needed.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Union
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import Dense, add_reduce, arbb_while, call, unwrap, wrap
-from repro.numerics import spmv as spmv_mod
+from repro.core import registry
+from repro.numerics import spmv as spmv_mod  # noqa: F401  (registers solver_spmv)
 from repro.numerics.sparse import CSR, DIA, ELL
 
 __all__ = ["cg_solve", "jacobi_solve", "gauss_seidel_solve", "CGResult"]
 
 Matrix = Union[CSR, ELL, DIA]
 
-_BACKENDS: dict[str, Callable] = {
-    "spmv1": spmv_mod.arbb_spmv1,
-    "spmv2": spmv_mod.arbb_spmv2,
-    "ell": spmv_mod.spmv_ell,
-    "dia": spmv_mod.spmv_dia,
-}
-
 
 @dataclasses.dataclass
 class CGResult:
+    """Device-resident result; ``int(res.iterations)`` / ``float(res.
+    residual_sq)`` sync at the caller's edge, not inside the solver."""
     x: Dense
-    iterations: int
-    residual_sq: float
+    iterations: jax.Array       # int32 scalar, on device
+    residual_sq: jax.Array      # f32 scalar, on device
+
+
+def _spmv(a: Matrix, p, backend: Optional[str]):
+    return registry.dispatch("solver_spmv", a, wrap(p), variant=backend)
 
 
 def cg_solve(a: Matrix, b, *, stop: float = 1e-10, max_iters: int = 1000,
-             backend: str = "spmv2") -> CGResult:
+             backend: Optional[str] = None) -> CGResult:
     """Conjugate gradients, the paper's §3.4 listing on the DSL.
 
-    Initialisation per the paper (x0 = 0, r0 = b, p0 = b - A x0 = b)."""
-    spmv = _BACKENDS[backend]
+    Initialisation per the paper (x0 = 0, r0 = b, p0 = b - A x0 = b).
+    ``backend`` names a ``solver_spmv`` registry variant ('spmv1', 'spmv2',
+    'ell', 'dia'); None lets the registry pick by matrix layout."""
     b = wrap(b)
     bv = unwrap(b)
     x0 = jnp.zeros_like(bv)
@@ -57,7 +67,7 @@ def cg_solve(a: Matrix, b, *, stop: float = 1e-10, max_iters: int = 1000,
 
     def body(state):
         x, r, p, r2, k = state
-        ap = unwrap(spmv(a, wrap(p)))                      # Ap = A @ p
+        ap = unwrap(_spmv(a, p, backend))                  # Ap = A @ p
         alpha = r2 / jnp.sum(p * ap)
         r2_old = r2
         r_new = r - alpha * ap
@@ -69,12 +79,11 @@ def cg_solve(a: Matrix, b, *, stop: float = 1e-10, max_iters: int = 1000,
 
     state = arbb_while(cond, body, (x0, r0, p0, r2_0, jnp.int32(0)))
     x, r, p, r2, k = state
-    return CGResult(x=wrap(x), iterations=int(k), residual_sq=float(r2))
+    return CGResult(x=wrap(x), iterations=k, residual_sq=r2)
 
 
-def _cg_jit_core(a: Matrix, bv, stop, max_iters: int, backend: str):
+def _cg_jit_core(a: Matrix, bv, stop, max_iters: int, backend: Optional[str]):
     """jit-friendly CG core returning (x, r2, k)."""
-    spmv = _BACKENDS[backend]
 
     def cond(state):
         x, r, p, r2, k = state
@@ -82,7 +91,7 @@ def _cg_jit_core(a: Matrix, bv, stop, max_iters: int, backend: str):
 
     def body(state):
         x, r, p, r2, k = state
-        ap = unwrap(spmv(a, wrap(p)))
+        ap = unwrap(_spmv(a, p, backend))
         alpha = r2 / jnp.sum(p * ap)
         r_new = r - alpha * ap
         r2_new = jnp.sum(r_new * r_new)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import Dense, arbb_for, call, emap, section, shift, unwrap, wrap
+from repro.core import registry
 from repro.numerics.sparse import CSR, DIA, ELL
 
 __all__ = ["arbb_spmv1", "arbb_spmv2", "spmv_ell", "spmv_dia",
@@ -99,3 +100,27 @@ spmv1 = call(arbb_spmv1)
 spmv2 = call(arbb_spmv2)
 spmv_ell_jit = call(spmv_ell)
 spmv_dia_jit = call(spmv_dia)
+
+
+# The solver-facing SpMV variants (the paper runs arbb_spmv1/arbb_spmv2; we
+# add the layout-specialised paths).  These are DSL-level formulations
+# (plane=None — they lower under any kernel plane); ``accepts`` keys on the
+# matrix layout so auto-selection picks the strongest formulation the
+# operand admits, and costs order CSR variants by the paper's own measured
+# ranking (spmv2's contiguity rewrite beats spmv1).
+def _takes(layout):
+    return lambda m, v, **_: isinstance(m, layout)
+
+
+registry.register("solver_spmv", "spmv1", arbb_spmv1, cost=40.0,
+                  accepts=_takes(CSR),
+                  doc="paper §3.2 port: map() over rows + recorded _for")
+registry.register("solver_spmv", "spmv2", arbb_spmv2, cost=20.0,
+                  accepts=_takes(CSR),
+                  doc="contiguity-exploiting flat segmented form")
+registry.register("solver_spmv", "ell", spmv_ell, cost=10.0,
+                  accepts=_takes(ELL),
+                  doc="rectangular ELL gather-multiply-reduce")
+registry.register("solver_spmv", "dia", spmv_dia, cost=5.0,
+                  accepts=_takes(DIA),
+                  doc="banded shifted-FMA, gather-free (CG fast path)")

@@ -18,6 +18,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import registry
 from repro.models.lm import LM
 
 Params = dict[str, Any]
@@ -53,6 +54,10 @@ class Engine:
         self.params = params
         self.max_len = max_len
         self.sampling = sampling
+        # Pin the kernel plane the registry resolves *now*: prefill/decode
+        # trace lazily on first call, and an ambient plane flip mid-service
+        # must not retrace (or worse, split) the compiled decode loop.
+        self.active_backend = registry.resolve_backend()
 
         self._prefill = jax.jit(
             functools.partial(lm.prefill, max_len=max_len))
@@ -71,6 +76,13 @@ class Engine:
                  eos_id: Optional[int] = None, seed: int = 0,
                  frontend_embeds: Optional[jax.Array] = None) -> jax.Array:
         """tokens (B, S) prompt -> (B, max_new_tokens) generated ids."""
+        with registry.use_backend(self.active_backend):
+            return self._generate(tokens, max_new_tokens=max_new_tokens,
+                                  eos_id=eos_id, seed=seed,
+                                  frontend_embeds=frontend_embeds)
+
+    def _generate(self, tokens, *, max_new_tokens, eos_id, seed,
+                  frontend_embeds):
         B = tokens.shape[0]
         logits, cache = self._prefill(self.params, tokens, frontend_embeds)
         key = jax.random.PRNGKey(seed)

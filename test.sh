@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 test runner with the repo's standard knobs.
+#
+#   ./test.sh                 # full suite
+#   ./test.sh tests/test_kernels.py -k matmul
+#
+# Knobs (all overridable from the caller's environment):
+#   REPRO_KERNELS    kernel plane request: interpret (default here — kernel
+#                    bodies execute on CPU so the Pallas paths are exercised
+#                    everywhere; registry falls back per-op where a shape
+#                    doesn't fit the kernel)
+#   JAX_ENABLE_X64   0 (default): the suite's numeric contract is f32 —
+#                    x64 promotion breaks exact-equality asserts (see
+#                    tests/conftest.py)
+#   JAX_PLATFORMS    cpu by default for hermetic CI runs
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export REPRO_KERNELS="${REPRO_KERNELS:-interpret}"
+export JAX_ENABLE_X64="${JAX_ENABLE_X64:-0}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+exec python -m pytest -x -q "$@"

@@ -10,6 +10,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_config, list_configs
 from repro.distributed.partition import (param_specs, zero1_specs,
                                          batch_spec, data_axes)
+from repro.core import compat
 from repro.launch.mesh import make_mesh
 from repro.models.lm import LM
 from repro.utils import hlo
@@ -109,7 +110,7 @@ def test_train_step_runs_under_degenerate_mesh():
     batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
              "labels": jnp.zeros((2, 8), jnp.int32)}
     mesh = make_mesh(data=1, model=1)
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state2, metrics = jax.jit(make_train_step(lm, opt))(state, batch)
     assert np.isfinite(float(metrics["loss"]))
 
@@ -118,7 +119,7 @@ def test_moe_groups_follow_mesh():
     from repro.models.moe import _default_groups
     assert _default_groups(64) == 1          # no mesh
     mesh = make_mesh(data=1, model=1)
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         assert _default_groups(64) == 1      # 1-wide data axis
 
 

@@ -141,7 +141,8 @@ def test_attention_chunked_matches_oracle(lq, lk, causal):
                                rtol=1e-3, atol=1e-4)
 
 
-def test_backend_dispatch_default_is_xla_on_cpu():
+def test_backend_dispatch_default_is_xla_on_cpu(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNELS", raising=False)  # test.sh sets it
     assert ops.current_backend() == "xla"
     with ops.backend("interpret"):
         assert ops.current_backend() == "interpret"
