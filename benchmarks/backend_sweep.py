@@ -114,11 +114,13 @@ def sweep_op(op: str) -> list[dict]:
             selected = None
         for v in registry.variants(op):
             row = {"op": op, "case": label, "variant": v.name,
-                   "plane": v.plane or "-",
+                   "plane": v.plane or "-", "scope": v.scope,
                    "selected": "*" if v.name == selected else ""}
             if not v.is_available(ctx):
-                row.update(seconds="", gflops="",
-                           note=f"unavailable on {ctx.platform}")
+                reason = ("needs an ambient O3/O4 mesh"
+                          if v.scope == "mesh" and ctx.scope != "mesh"
+                          else f"unavailable on {ctx.platform}")
+                row.update(seconds="", gflops="", note=reason)
             elif not v.matches(*args, **kwargs):
                 row.update(seconds="", gflops="", note="layout/shape mismatch")
             else:
@@ -137,8 +139,8 @@ def main(only: Optional[str] = None) -> list[dict]:
     for op in ops:
         rows = sweep_op(op)
         print_table(f"backend sweep: {op}", rows,
-                    ["op", "case", "variant", "plane", "seconds", "gflops",
-                     "selected", "note"])
+                    ["op", "case", "variant", "plane", "scope", "seconds",
+                     "gflops", "selected", "note"])
         all_rows.extend(rows)
     if not all_rows:
         print(f"backend sweep: no registry ops for suite {only!r}")

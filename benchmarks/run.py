@@ -4,19 +4,27 @@
     PYTHONPATH=src python -m benchmarks.run --full    # paper's full sweeps
     PYTHONPATH=src python -m benchmarks.run --only mod2am
     PYTHONPATH=src python -m benchmarks.run --only mod2am --backend-sweep
+    PYTHONPATH=src python -m benchmarks.run --scaling-sweep
 
 ``--backend-sweep`` benchmarks every *registered registry variant* per op
 instead of the paper-figure suites — the ArBB-vs-OpenMP-vs-MKL comparison,
 reproduced for our own retargeting plane.
 
+``--scaling-sweep`` replays the paper's speedup-vs-cores tables as
+speedup-vs-devices: the four paper kernels at 1/2/4/8 host-platform devices
+(the device count is forced before jax init), chip variants at 1, the
+mesh-scoped shard_map variants beyond.
+
 The ``--json-out`` payload records, per suite, the row data, wall time,
-status, and the kernel plane the registry resolved while it ran, so
-``BENCH_*.json`` trajectories stay comparable across PRs and machines.
+status, the kernel plane the registry resolved while it ran, and the
+device count / mesh shapes it saw, so ``BENCH_*.json`` trajectories stay
+comparable across PRs and machines — and scaling regressions are visible.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -30,14 +38,46 @@ def main(argv=None) -> int:
     ap.add_argument("--backend-sweep", action="store_true",
                     help="benchmark every registered registry variant per op "
                          "and print a per-variant comparison table")
+    ap.add_argument("--scaling-sweep", action="store_true",
+                    help="time the four paper kernels at 1/2/4/8 devices "
+                         "(speedup-vs-devices; forces 8 fake host devices)")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
+
+    if args.scaling_sweep:
+        # Must precede the first jax import — jax locks the device count at
+        # init.  An explicit caller-provided count wins.
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=8").strip()
 
     import jax
     from repro.core import registry
 
     meta = {"platform": jax.default_backend(), "jax": jax.__version__,
-            "backend": registry.resolve_backend()}
+            "backend": registry.resolve_backend(),
+            "device_count": jax.device_count()}
+
+    if args.scaling_sweep:
+        from benchmarks import scaling_sweep
+        t0 = time.time()
+        try:
+            rows = scaling_sweep.main(only=args.only)
+            entry = {"status": "ok", "rows": rows,
+                     "device_counts": sorted({r["devices"] for r in rows}),
+                     "meshes": sorted({r["mesh"] for r in rows})}
+        except Exception as e:
+            print(f"[scaling_sweep] FAILED: {type(e).__name__}: {e}")
+            entry = {"status": "error", "error": f"{type(e).__name__}: {e}"}
+        entry["seconds"] = round(time.time() - t0, 3)
+        entry["backend"] = registry.resolve_backend()
+        payload = {"meta": meta, "suites": {"scaling_sweep": entry}}
+        if args.json_out:
+            with open(args.json_out, "w") as f:
+                json.dump(payload, f, default=str)
+        print("\nscaling sweep complete")
+        return 1 if entry["status"] == "error" else 0
 
     if args.backend_sweep:
         from benchmarks import backend_sweep

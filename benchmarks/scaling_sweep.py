@@ -1,0 +1,124 @@
+"""``--scaling-sweep`` — the paper's speedup-vs-cores tables, as
+speedup-vs-devices.
+
+The paper's headline artefact is one program text re-run under O2 and O3
+with ``ARBB_NUM_CORES`` sweeping the core count (Figs. 1-7: speedup columns
+per thread count).  This module replays that for the mesh ladder: each of
+the four paper kernels (mod2am matmul, mod2as SpMV, mod2f FFT, §3.4 CG) is
+timed at 1 device (O2, the chip baseline) and on (d, 1) ``(data, model)``
+meshes for d in {2, 4, 8} under ``use_level(O3)`` — the registry's scope
+dimension retargets every call to the mesh-scoped shard_map variants, the
+program text never changing.
+
+On the CPU container the fake host-platform devices share the same silicon,
+so absolute speedups are not the claim (exactly as the paper's GFlop/s were
+Westmere-specific); the artefact is the *trajectory*: per-device-count
+timings, the variant each count selected, and the mesh shape, persisted via
+``--json-out`` so scaling regressions show up across PRs.
+
+    PYTHONPATH=src python -m benchmarks.run --scaling-sweep
+    PYTHONPATH=src python -m benchmarks.run --scaling-sweep --json-out s.json
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+import numpy as np
+
+from benchmarks.common import print_table, time_fn
+
+#: device counts swept (clamped to what the platform actually has)
+DEVICE_COUNTS = (1, 2, 4, 8)
+
+
+def _problems():
+    """kernel name -> (timed_fn(), selected_variant_fn) on fixed inputs
+    sized so every DEVICE_COUNTS entry divides them."""
+    import jax.numpy as jnp
+
+    import repro.core as C
+    from repro.core import registry
+    from repro.kernels import ops
+    from repro.numerics import solvers, sparse
+
+    rng = np.random.default_rng(42)
+    problems = {}
+
+    n = 256
+    a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    problems["mod2am"] = (lambda: ops.matmul(a, b),
+                          lambda: registry.select("matmul", a, b).name)
+
+    spd = sparse.banded_spd(2048, 31, seed=1)
+    ell = sparse.ell_from_csr(sparse.csr_from_dense(spd))
+    x = C.bind(rng.standard_normal(2048).astype(np.float32))
+    problems["mod2as"] = (
+        lambda: registry.dispatch("solver_spmv", ell, x),
+        lambda: registry.select("solver_spmv", ell, x).name)
+
+    z = jnp.asarray(rng.standard_normal(4096) + 1j * rng.standard_normal(4096),
+                    jnp.complex64)
+    problems["mod2f"] = (lambda: ops.fft(z),
+                         lambda: registry.select("fft", z).name)
+
+    cg_a = sparse.dia_from_dense(sparse.banded_spd(1024, 31, seed=2))
+    cg_bv = C.unwrap(C.bind(rng.standard_normal(1024).astype(np.float32)))
+    # cg_jit (the call() closure) so chip and mesh both time a cached
+    # compiled solve, not per-call retracing
+    problems["cg"] = (
+        lambda: solvers.cg_jit(cg_a, cg_bv, 1e-10, 2048, None)[0],
+        lambda: solvers._selected_spmv(cg_a, cg_bv, None).name)
+
+    return problems
+
+
+def main(device_counts: Iterable[int] = DEVICE_COUNTS,
+         only: Optional[str] = None) -> list[dict]:
+    import contextlib
+
+    import jax
+
+    from repro.core import ExecLevel, compat, use_level
+
+    avail = jax.device_count()
+    counts = [d for d in device_counts if d <= avail]
+    dropped = [d for d in device_counts if d > avail]
+    if dropped:
+        print(f"scaling sweep: only {avail} device(s) visible; "
+              f"skipping counts {dropped} (run via benchmarks.run, which "
+              f"forces 8 host-platform devices before jax init)")
+
+    problems = _problems()
+    if only:
+        problems = {k: v for k, v in problems.items() if k == only}
+
+    rows: list[dict] = []
+    base: dict[str, float] = {}
+    for d in counts:
+        if d == 1:
+            ctx = use_level(ExecLevel.O2)          # the chip baseline
+            mesh_label = "-"
+        else:
+            mesh = compat.make_mesh((d, 1), ("data", "model"),
+                                    devices=jax.devices()[:d])
+            ctx = use_level(ExecLevel.O3, mesh)
+            mesh_label = f"{d}x1"
+        with ctx:
+            for kernel, (fn, selected) in problems.items():
+                t = time_fn(lambda: fn(), warmup=1, iters=3)
+                base.setdefault(kernel, t)
+                rows.append({
+                    "kernel": kernel, "devices": d, "mesh": mesh_label,
+                    "variant": selected(), "seconds": round(t, 6),
+                    "speedup": round(base[kernel] / t, 3),
+                })
+    print_table("scaling sweep (speedup vs devices; paper's "
+                "ARBB_NUM_CORES tables, O2 -> O3 meshes)", rows,
+                ["kernel", "devices", "mesh", "variant", "seconds",
+                 "speedup"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

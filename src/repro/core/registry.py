@@ -19,6 +19,12 @@ Vocabulary (DESIGN.md §1):
               implementation of an op.  DSL-level variants (e.g. the solver
               SpMV formulations spmv1/spmv2/ell/dia) have ``plane=None``:
               they are jnp programs and run under any plane.
+    scope     how far a variant reaches: 'chip' (one device — every kernel
+              and DSL formulation the paper ports) or 'mesh' (a shard_map
+              program spanning the ambient mesh's 'data' axis — the
+              ARBB_NUM_CORES story taken past the shared-memory ceiling,
+              DESIGN.md §7).  Mesh-scoped variants are only admissible when
+              an O3/O4 mesh is ambient, and then they are *preferred*.
     available(ctx)     capability predicate over (ExecLevel, mesh, platform)
     accepts(*args)     per-call predicate over concrete arguments (shapes,
                        layouts) — e.g. the DIA formulation only accepts DIA
@@ -28,12 +34,17 @@ Vocabulary (DESIGN.md §1):
 Selection rules (DESIGN.md §6):
 
     1. ``dispatch(op, ..., variant=name)`` — explicit, always honoured.
-    2. Otherwise variants are ordered (requested-plane-first, cost, name)
-       and the first one that is *available* on this context AND *accepts*
-       the arguments wins.
+    2. Otherwise variants are ordered (scope-match-first,
+       requested-plane-first, cost, name) and the first one that is
+       *available* on this context AND *accepts* the arguments wins.
+       Scope outranks the plane request: under an active mesh a sharded
+       formulation beats any single-chip kernel, exactly as ArBB O3 beats
+       O2 without the program text changing.
     3. A requested plane that is unavailable (e.g. 'pallas' off-TPU)
        degrades gracefully: selection falls through to the best available
-       variant — the same program text, retargeted.
+       variant — the same program text, retargeted.  Symmetrically, a
+       mesh-scoped variant without an ambient mesh (or whose shapes don't
+       divide the mesh) degrades to the chip formulation.
 
 Providers register lazily: ops are declared here by module path and imported
 on first dispatch, so upper layers (models, serve) depend only on this
@@ -55,35 +66,46 @@ from repro.core import execlevel
 __all__ = ["Variant", "SelectContext", "OperatorRegistry", "REGISTRY",
            "select_context",
            "register", "unregister", "dispatch", "select", "variants", "ops",
-           "use_backend", "requested_backend", "resolve_backend", "PLANES"]
+           "use_backend", "requested_backend", "resolve_backend", "PLANES",
+           "SCOPES"]
 
 #: The kernel retargeting planes (ordered by preference on TPU).
 PLANES = ("pallas", "interpret", "xla")
 
-#: op name -> module that registers its variants on import.
+#: The selection scopes: one device vs the ambient O3/O4 mesh.
+SCOPES = ("chip", "mesh")
+
+#: op name -> modules that register its variants on import (chip kernels
+#: first, then the mesh-scoped shard_map formulations).
 _PROVIDERS = {
-    "matmul": "repro.kernels.ops",
-    "spmv_ell": "repro.kernels.ops",
-    "spmv_dia": "repro.kernels.ops",
-    "fft": "repro.kernels.ops",
-    "flash_attention": "repro.kernels.ops",
-    "solver_spmv": "repro.numerics.spmv",
+    "matmul": ("repro.kernels.ops", "repro.distributed.numerics"),
+    "spmv_ell": ("repro.kernels.ops",),
+    "spmv_dia": ("repro.kernels.ops",),
+    "fft": ("repro.kernels.ops", "repro.distributed.numerics"),
+    "flash_attention": ("repro.kernels.ops",),
+    "solver_spmv": ("repro.numerics.spmv", "repro.distributed.numerics"),
 }
+
+#: provider modules already imported (an op's chip module may register it
+#: before its mesh module has run; membership is per-module, not per-op).
+_loaded_providers: set = set()
 
 
 @dataclasses.dataclass(frozen=True)
 class SelectContext:
-    """What variant selection may look at: level × mesh × hardware."""
+    """What variant selection may look at: level × mesh × hardware × scope."""
     level: execlevel.ExecLevel
     mesh: Optional[Any]
     platform: str           # jax.default_backend(): 'tpu' | 'cpu' | 'gpu'
+    scope: str = "chip"     # 'mesh' when an O3/O4 mesh is ambient
 
 
 def select_context() -> SelectContext:
     """The context variant selection sees right now."""
     ctx = execlevel.current()
+    scope = "mesh" if ctx.is_distributed else "chip"
     return SelectContext(level=ctx.level, mesh=ctx.mesh,
-                         platform=jax.default_backend())
+                         platform=jax.default_backend(), scope=scope)
 
 
 def _plane_available(plane: Optional[str], ctx: SelectContext) -> bool:
@@ -98,6 +120,7 @@ class Variant:
     name: str
     impl: Callable
     plane: Optional[str] = None
+    scope: str = "chip"
     cost: float = 10.0
     available: Optional[Callable[[SelectContext], bool]] = None
     accepts: Optional[Callable[..., bool]] = None
@@ -106,6 +129,8 @@ class Variant:
     def is_available(self, ctx: SelectContext) -> bool:
         if not _plane_available(self.plane, ctx):
             return False
+        if self.scope == "mesh" and ctx.scope != "mesh":
+            return False        # a shard_map program needs an ambient mesh
         return self.available(ctx) if self.available is not None else True
 
     def matches(self, *args: Any, **kwargs: Any) -> bool:
@@ -171,19 +196,24 @@ class OperatorRegistry:
     # -- registration -------------------------------------------------------
 
     def register(self, op: str, name: str, impl: Optional[Callable] = None, *,
-                 plane: Optional[str] = None, cost: float = 10.0,
+                 plane: Optional[str] = None, scope: str = "chip",
+                 cost: float = 10.0,
                  available: Optional[Callable[[SelectContext], bool]] = None,
                  accepts: Optional[Callable[..., bool]] = None,
                  doc: str = ""):
         """Register a variant.  Usable directly or as a decorator."""
         if impl is None:
             def deco(fn: Callable) -> Callable:
-                self.register(op, name, fn, plane=plane, cost=cost,
-                              available=available, accepts=accepts, doc=doc)
+                self.register(op, name, fn, plane=plane, scope=scope,
+                              cost=cost, available=available, accepts=accepts,
+                              doc=doc)
                 return fn
             return deco
         if plane is not None and plane not in PLANES:
             raise ValueError(f"unknown plane {plane!r} for {op}/{name}")
+        if scope not in SCOPES:
+            raise ValueError(f"unknown scope {scope!r} for {op}/{name}; "
+                             f"choose from {SCOPES}")
         with self._lock:
             table = self._ops.setdefault(op, {})
             if name in table:
@@ -191,7 +221,7 @@ class OperatorRegistry:
                     f"duplicate variant {name!r} for op {op!r}; "
                     f"unregister it first to replace")
             table[name] = Variant(op=op, name=name, impl=impl, plane=plane,
-                                  cost=cost, available=available,
+                                  scope=scope, cost=cost, available=available,
                                   accepts=accepts, doc=doc or impl.__doc__
                                   or "")
         return impl
@@ -207,8 +237,12 @@ class OperatorRegistry:
     # -- lookup -------------------------------------------------------------
 
     def _table(self, op: str) -> dict[str, Variant]:
-        if op not in self._ops and op in _PROVIDERS:
-            importlib.import_module(_PROVIDERS[op])
+        for module in _PROVIDERS.get(op, ()):
+            if module not in _loaded_providers:
+                # mark loaded only on success: a failed provider import must
+                # stay loud on retry, not silently drop its variants forever
+                importlib.import_module(module)
+                _loaded_providers.add(module)
         if op not in self._ops:
             raise LookupError(f"unknown op {op!r}; registered: "
                               f"{sorted(self._ops)}")
@@ -235,9 +269,14 @@ class OperatorRegistry:
             return self.get(op, variant)
         ctx = select_context()
         req = requested_backend()
+        # Scope match outranks the plane request: under an active mesh the
+        # sharded formulation wins (ARBB_NUM_CORES reborn as mesh shape);
+        # without one, mesh variants are unavailable and chip order is
+        # exactly what it always was.
         ranked = sorted(
             self._table(op).values(),
-            key=lambda v: (0 if (req is not None and v.plane == req) else 1,
+            key=lambda v: (0 if v.scope == ctx.scope else 1,
+                           0 if (req is not None and v.plane == req) else 1,
                            v.cost, v.name))
         for v in ranked:
             if v.is_available(ctx) and v.matches(*args, **kwargs):

@@ -1,2 +1,8 @@
-"""repro.distributed — sharding rules + collective helpers."""
+"""repro.distributed — sharding rules, collective helpers, and the
+mesh-scoped numerics plane.
+
+``repro.distributed.numerics`` (DESIGN.md §7) is deliberately NOT imported
+here: it registers the mesh-scoped variants of the paper kernels as a side
+effect, and the registry lazy-loads it per op (``registry._PROVIDERS``) so
+importing this package stays light."""
 from repro.distributed import sharding  # noqa: F401

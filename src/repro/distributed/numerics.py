@@ -1,0 +1,367 @@
+"""Mesh-scoped formulations of the paper's four kernels (DESIGN.md §7).
+
+The paper scales one unchanged program text across cores with
+``ARBB_NUM_CORES`` (§3, O2 → O3) but stops at the shared-memory ceiling
+(§4: "ArBB is limited to shared memory systems").  This module is the rung
+past it: for each paper kernel — mod2am matmul, mod2as SpMV, mod2f FFT and
+the §3.4 CG solve — a ``shard_map`` program partitioned over the ambient
+mesh's ``data`` axis registers as a **mesh-scoped registry variant**.  The
+registry's scope dimension then selects these automatically whenever an
+O3/O4 mesh is ambient and degrades to the chip formulations without one;
+call sites never change (the RapidMind lesson: retarget the selection
+plane, not the source).
+
+Partitioning per kernel:
+
+    solver_spmv  row partition over 'data'.  The matrix shards by rows
+                 (ELL values/cols rows; DIA diagonal columns; CSR row-pointer
+                 sections with values/indices replicated), ``x`` is
+                 replicated, and each device runs the *chip* formulation on
+                 its rows — local kernel dispatch inside ``shard_map``.
+    matmul       K partition: A column-shards, B row-shards, each device
+                 computes a full local MXU product and the partials
+                 ``psum_scatter`` along K into a row-sharded C.
+    fft          transpose (four-step) algorithm: view n = n1·n2 with
+                 n1 = mesh devices, row-local FFTs of length n2, twiddle
+                 scaling, an ``all_to_all`` corner turn, then column FFTs
+                 of length n1.  One global transpose instead of per-stage
+                 butterflies across devices.
+    cg           the whole O3 solve runs inside one ``shard_map``: vectors
+                 live row-sharded, SpMV gathers ``p`` once per iteration,
+                 and every dot product is a local partial + ``psum`` —
+                 see :func:`cg_mesh`, consumed by ``repro.numerics.solvers``.
+
+All variants shard over the ``data`` axis only; on an O4 ``(pod, data,
+model)`` mesh the pod axis computes replicated (hierarchical pod-level
+reduction is a ROADMAP open item).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import registry
+from repro.core.containers import Dense, unwrap, wrap
+from repro.numerics.sparse import CSR, DIA, ELL
+from repro.numerics.spmv import csr_row_reduce
+
+__all__ = ["cg_mesh", "mesh_matmul", "mesh_fft", "mesh_spmv",
+           "MESH_SPMV_VARIANTS", "data_size"]
+
+#: The mesh axis every variant here partitions over.
+AXIS = "data"
+
+#: The mesh-scoped solver_spmv variant names, keyed by layout.
+MESH_SPMV_VARIANTS = {CSR: "mesh_csr", ELL: "mesh_ell", DIA: "mesh_dia"}
+
+
+def data_size(mesh) -> int:
+    """Width of the 'data' axis, or 0 when the mesh can't host our shards."""
+    if mesh is None or AXIS not in mesh.axis_names:
+        return 0
+    return int(mesh.shape[AXIS])
+
+
+def _ambient_mesh():
+    ctx = registry.select_context()
+    return ctx.mesh if ctx.scope == "mesh" else None
+
+
+def _require_mesh():
+    mesh = _ambient_mesh()
+    if data_size(mesh) == 0:
+        raise RuntimeError(
+            "mesh-scoped variant invoked without an ambient O3/O4 mesh "
+            "carrying a 'data' axis; enter use_level(O3) first")
+    return mesh
+
+
+def _mesh_available(ctx: registry.SelectContext) -> bool:
+    return data_size(ctx.mesh) > 0
+
+
+# ---------------------------------------------------------------------------
+# row-partitioned SpMV: matrix shards per layout, x replicated, chip kernel
+# dispatched per shard
+# ---------------------------------------------------------------------------
+#
+# Every mesh entry point below splits into a per-call part (pull the shard
+# arrays off the operand) and an executable built once per
+# (mesh, layout signature) via lru_cache and wrapped in jax.jit — so
+# repeated dispatches hit the compilation cache exactly like the chip
+# kernels' module-level jit wrappers do, instead of retracing a fresh
+# shard_map closure per call.
+
+#: shard_map in_specs for each layout's shard arrays (x is prepended as P()).
+_SPMV_SPECS = {
+    "ell": (P(AXIS, None), P(AXIS, None)),        # values, cols by rows
+    "csr": (P(AXIS), P(AXIS), P(), P()),          # rowpi, rowpj; vals/indx whole
+    "dia": (P(None, AXIS),),                      # diagonal columns by rows
+}
+
+
+def _spmv_parts(a) -> tuple[str, Any, tuple]:
+    """(kind, static signature, shard arrays) for matrix ``a``."""
+    if isinstance(a, ELL):
+        return "ell", None, (a.values, a.cols)
+    if isinstance(a, CSR):
+        return "csr", None, (a.rowp[:-1], a.rowp[1:], a.matvals, a.indx)
+    if isinstance(a, DIA):
+        return "dia", a.offsets, (a.diags,)
+    raise TypeError(f"no row partitioning for matrix type {type(a)!r}")
+
+
+def _local_spmv(kind: str, static):
+    """``local(loc, x_full) -> local y rows``, run *inside* shard_map.
+
+    Where the layout allows, the shard is re-wrapped as a container and the
+    matching chip formulation pinned through the registry — the same
+    program text, one shard at a time.
+    """
+    if kind == "ell":
+        def local(loc, xf):
+            vals, cols = loc
+            shard = ELL(values=vals, cols=cols,
+                        shape=(vals.shape[0], xf.shape[0]))
+            return unwrap(registry.dispatch("solver_spmv", shard, wrap(xf),
+                                            variant="ell"))
+        return local
+
+    if kind == "csr":
+        def local(loc, xf):
+            rowpi, rowpj, matvals, indx = loc
+            # the paper's map(local::reduce) over this device's row sections
+            return jax.vmap(csr_row_reduce(matvals, indx, xf))(rowpi, rowpj)
+        return local
+
+    offsets = static                                # "dia"
+    maxoff = max((abs(o) for o in offsets), default=0)
+
+    def local(loc, xf):
+        (diags,) = loc                      # (ndiags, n_local)
+        n_local = diags.shape[1]
+        row0 = jax.lax.axis_index(AXIS) * n_local
+        xp = jnp.pad(xf, (maxoff, maxoff))
+        y = jnp.zeros((n_local,), diags.dtype)
+        for d, off in enumerate(offsets):       # static: shifted FMAs
+            seg = jax.lax.dynamic_slice(xp, (row0 + off + maxoff,),
+                                        (n_local,))
+            y = y + diags[d] * seg
+        return y
+    return local
+
+
+@functools.lru_cache(maxsize=None)
+def _spmv_exec(mesh, kind: str, static):
+    local_fn = _local_spmv(kind, static)
+
+    def run(xf, *loc):
+        return local_fn(loc, xf)
+
+    return jax.jit(shard_map(run, mesh=mesh,
+                             in_specs=(P(),) + _SPMV_SPECS[kind],
+                             out_specs=P(AXIS), check_rep=False))
+
+
+def mesh_spmv(a, invec, **_: Any) -> Dense:
+    """Row-partitioned SpMV over the ambient mesh (y sharded by rows)."""
+    mesh = _require_mesh()
+    kind, static, arrays = _spmv_parts(a)
+    y = _spmv_exec(mesh, kind, static)(unwrap(wrap(invec)), *arrays)
+    return wrap(y)
+
+
+def _spmv_accepts(layout):
+    def accepts(m, v, **_):
+        D = data_size(_ambient_mesh())
+        return (isinstance(m, layout) and D > 0 and m.shape[0] % D == 0)
+    return accepts
+
+
+# costs mirror the chip ordering (dia < ell < csr) — irrelevant against chip
+# variants (scope ranks first) but meaningful among the mesh formulations.
+registry.register("solver_spmv", "mesh_dia", mesh_spmv, scope="mesh",
+                  cost=4.0, available=_mesh_available,
+                  accepts=_spmv_accepts(DIA),
+                  doc="row-sharded banded shifted-FMA over the data axis")
+registry.register("solver_spmv", "mesh_ell", mesh_spmv, scope="mesh",
+                  cost=8.0, available=_mesh_available,
+                  accepts=_spmv_accepts(ELL),
+                  doc="row-sharded ELL; chip kernel dispatched per shard")
+registry.register("solver_spmv", "mesh_csr", mesh_spmv, scope="mesh",
+                  cost=15.0, available=_mesh_available,
+                  accepts=_spmv_accepts(CSR),
+                  doc="row-pointer sections sharded; per-row recorded _for")
+
+
+# ---------------------------------------------------------------------------
+# K-partitioned matmul: local MXU tiles + psum_scatter along K
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _matmul_exec(mesh, plane: str, blocks):
+    block_m, block_n, block_k = blocks
+
+    def local(al, bl):
+        part = registry.dispatch("matmul", al, bl, variant=plane,
+                                 block_m=block_m, block_n=block_n,
+                                 block_k=block_k)
+        return jax.lax.psum_scatter(part, AXIS, scatter_dimension=0,
+                                    tiled=True)
+
+    return jax.jit(shard_map(local, mesh=mesh,
+                             in_specs=(P(None, AXIS), P(AXIS, None)),
+                             out_specs=P(AXIS, None), check_rep=False))
+
+
+def mesh_matmul(a, b, *, block_m=None, block_n=None, block_k=None):
+    """C = A @ B with A column- and B row-sharded along K.
+
+    Each device multiplies its K panel with the chip kernel (pallas on TPU,
+    xla elsewhere — the plane resolves exactly as on one chip), then the
+    full-size partials reduce-scatter over rows: C comes back row-sharded,
+    no device ever holds more than (M, K/D) + (K/D, N) + (M, N) floats.
+    """
+    mesh = _require_mesh()
+    plane = registry.resolve_backend()      # chip variant names == planes
+    fn = _matmul_exec(mesh, plane, (block_m, block_n, block_k))
+    return fn(unwrap(wrap(a)), unwrap(wrap(b)))
+
+
+def _matmul_accepts(a, b, **_):
+    D = data_size(_ambient_mesh())
+    return (D > 0 and getattr(a, "ndim", 0) == 2 and
+            getattr(b, "ndim", 0) == 2 and
+            a.shape[0] % D == 0 and a.shape[1] % D == 0)
+
+
+registry.register("matmul", "mesh_psum", mesh_matmul, scope="mesh", cost=1.0,
+                  available=_mesh_available, accepts=_matmul_accepts,
+                  doc="K-partitioned shard_map matmul, psum_scatter along K")
+
+
+# ---------------------------------------------------------------------------
+# transpose-based distributed FFT (four-step: FFT, twiddle, corner turn, FFT)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _fft_exec(mesh):
+    n1 = data_size(mesh)
+
+    def local(al):                          # (n1/D = 1 row, n2)
+        rows, n2 = al.shape
+        n = n1 * n2
+        i1 = jax.lax.axis_index(AXIS) * rows + jnp.arange(rows)
+        b = jnp.fft.fft(al, axis=1)
+        k2 = jnp.arange(n2)
+        tw = jnp.exp(-2j * jnp.pi * (i1[:, None] * k2[None, :]) / n)
+        b = b * tw.astype(b.dtype)
+        # corner turn: (rows, n2) row shards -> (n1, n2/D) column shards
+        bt = jax.lax.all_to_all(b, AXIS, split_axis=1, concat_axis=0,
+                                tiled=True)
+        return jnp.fft.fft(bt, axis=0)      # FFT over i1 -> k1
+
+    def full(x):
+        n = x.shape[0]
+        # A[i1, i2] = x[i1 + n1*i2], row-sharded over devices
+        a = jnp.reshape(x, (n // n1, n1)).T
+        c = shard_map(local, mesh=mesh, in_specs=P(AXIS, None),
+                      out_specs=P(None, AXIS), check_rep=False)(a)
+        # X[n2*k1 + k2] = C[k1, k2]: row-major flatten is the output order
+        return jnp.reshape(c, (n,)).astype(x.dtype)
+
+    return jax.jit(full)
+
+
+def mesh_fft(x):
+    """Distributed DFT of a length-n vector via the transpose algorithm.
+
+    With i = i1 + n1·i2 and k = k2 + n2·k1 (n1 = device count):
+
+        X[n2·k1 + k2] = Σ_{i1} W_{n1}^{i1·k1} · W_n^{i1·k2}
+                        · Σ_{i2} W_{n2}^{i2·k2} x[i1 + n1·i2]
+
+    Each device owns one i1-row: an n2-point local FFT, the W_n^{i1·k2}
+    twiddle scale, then a single ``all_to_all`` corner turn re-shards along
+    k2 so the final n1-point FFTs are column-local.  One global transpose
+    replaces the per-stage cross-device butterflies — the split-stream
+    lesson (keep data movement structural) at mesh scale.
+    """
+    return _fft_exec(_require_mesh())(x)
+
+
+def _fft_accepts(x):
+    D = data_size(_ambient_mesh())
+    n = x.shape[0] if getattr(x, "ndim", 0) == 1 else 0
+    return (D > 0 and n >= 2 and (n & (n - 1)) == 0 and
+            n % D == 0 and (n // D) % D == 0)
+
+
+registry.register("fft", "mesh_transpose", mesh_fft, scope="mesh", cost=1.0,
+                  available=_mesh_available, accepts=_fft_accepts,
+                  doc="four-step transpose FFT: local FFTs + one all_to_all")
+
+
+# ---------------------------------------------------------------------------
+# distributed CG: the whole solve inside one shard_map, dots as psums
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _cg_exec(mesh, kind: str, static, max_iters: int):
+    local_fn = _local_spmv(kind, static)
+
+    def run(stop, b_loc, *a_loc):
+        def cond(state):
+            x, r, p, r2, k = state
+            return jnp.logical_and(r2 > stop, k < max_iters)
+
+        def body(state):
+            x, r, p, r2, k = state
+            p_full = jax.lax.all_gather(p, AXIS, tiled=True)
+            ap = local_fn(a_loc, p_full)                 # local rows of A@p
+            pap = jax.lax.psum(jnp.sum(p * ap), AXIS)
+            alpha = r2 / pap
+            r_new = r - alpha * ap
+            r2_new = jax.lax.psum(jnp.sum(r_new * r_new), AXIS)
+            beta = r2_new / r2
+            return (x + alpha * p, r_new, r_new + beta * p, r2_new, k + 1)
+
+        r2_0 = jax.lax.psum(jnp.sum(b_loc * b_loc), AXIS)
+        init = (jnp.zeros_like(b_loc), b_loc, b_loc, r2_0, jnp.int32(0))
+        x, r, p, r2, k = jax.lax.while_loop(cond, body, init)
+        return x, r2, k
+
+    return jax.jit(shard_map(run, mesh=mesh,
+                             in_specs=(P(), P(AXIS)) + _SPMV_SPECS[kind],
+                             out_specs=(P(AXIS), P(), P()), check_rep=False))
+
+
+def cg_mesh(a, bv: jax.Array, *, stop, max_iters: int, mesh=None,
+            variant: Any = None) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The paper's §3.4 CG iteration, row-sharded end-to-end.
+
+    Vectors (x, r, p) live as row shards; each iteration all-gathers ``p``
+    once for the local SpMV rows and reduces the two dot products with
+    ``psum`` — the only cross-device traffic.  Loop control (r2, k) is
+    psum-replicated, so every device takes the same branch.  Returns the
+    same (x, r2, k) triple as the chip core, with x row-sharded over the
+    mesh.
+
+    ``variant`` is the caller's explicit solver_spmv pin, if any: the
+    partitioning is determined by the operand layout, so a pin that names a
+    different mesh formulation is an error, not a silent substitution.
+    """
+    mesh = mesh if mesh is not None else _require_mesh()
+    expected = MESH_SPMV_VARIANTS[type(a)]
+    if variant is not None and variant != expected:
+        raise ValueError(
+            f"solver_spmv variant {variant!r} was pinned, but a "
+            f"{type(a).__name__} operand row-partitions as {expected!r}")
+    kind, static, arrays = _spmv_parts(a)
+    stop = jnp.asarray(stop, bv.dtype)
+    return _cg_exec(mesh, kind, static, int(max_iters))(stop, bv, *arrays)

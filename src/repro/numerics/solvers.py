@@ -15,6 +15,14 @@ matrix layout admits.
 residual, so composing solves (or jitting around them) never forces a host
 sync — convert with ``int()`` / ``float()`` at the edge where a Python value
 is genuinely needed.
+
+The solve is also **scope-aware** (DESIGN.md §7): under ``use_level(O3)``
+with an ambient mesh the registry selects a mesh-scoped ``solver_spmv``
+variant, and the whole iteration reruns as
+:func:`repro.distributed.numerics.cg_mesh` — vectors row-sharded, SpMV
+local per shard, both dot products ``psum``s.  Same program text at the
+call site; ``ARBB_NUM_CORES`` reborn as mesh shape.  An explicit
+``backend=`` still pins either formulation.
 """
 from __future__ import annotations
 
@@ -47,15 +55,29 @@ def _spmv(a: Matrix, p, backend: Optional[str]):
     return registry.dispatch("solver_spmv", a, wrap(p), variant=backend)
 
 
+def _selected_spmv(a: Matrix, bv, backend: Optional[str]) -> registry.Variant:
+    """The solver_spmv variant the registry would run for this solve —
+    the scope decision (chip loop vs mesh shard_map) hangs off its scope."""
+    return registry.select("solver_spmv", a, wrap(bv), variant=backend)
+
+
 def cg_solve(a: Matrix, b, *, stop: float = 1e-10, max_iters: int = 1000,
              backend: Optional[str] = None) -> CGResult:
     """Conjugate gradients, the paper's §3.4 listing on the DSL.
 
     Initialisation per the paper (x0 = 0, r0 = b, p0 = b - A x0 = b).
     ``backend`` names a ``solver_spmv`` registry variant ('spmv1', 'spmv2',
-    'ell', 'dia'); None lets the registry pick by matrix layout."""
+    'ell', 'dia', or the mesh-scoped 'mesh_*' forms); None lets the registry
+    pick by matrix layout *and* scope — under an active O3/O4 mesh the whole
+    solve runs sharded with psum dot products."""
     b = wrap(b)
     bv = unwrap(b)
+    selected = _selected_spmv(a, bv, backend)
+    if selected.scope == "mesh":
+        from repro.distributed import numerics as dnum
+        x, r2, k = dnum.cg_mesh(a, bv, stop=stop, max_iters=max_iters,
+                                variant=backend)
+        return CGResult(x=wrap(x), iterations=k, residual_sq=r2)
     x0 = jnp.zeros_like(bv)
     r0 = bv
     p0 = bv
@@ -83,7 +105,13 @@ def cg_solve(a: Matrix, b, *, stop: float = 1e-10, max_iters: int = 1000,
 
 
 def _cg_jit_core(a: Matrix, bv, stop, max_iters: int, backend: Optional[str]):
-    """jit-friendly CG core returning (x, r2, k)."""
+    """jit-friendly CG core returning (x, r2, k); scope-aware like
+    :func:`cg_solve` (the mesh core is itself traceable, so it inlines
+    under the enclosing jit)."""
+    if _selected_spmv(a, bv, backend).scope == "mesh":
+        from repro.distributed import numerics as dnum
+        return dnum.cg_mesh(a, bv, stop=stop, max_iters=max_iters,
+                            variant=backend)
 
     def cond(state):
         x, r, p, r2, k = state

@@ -24,7 +24,23 @@ from repro.core import registry
 from repro.numerics.sparse import CSR, DIA, ELL
 
 __all__ = ["arbb_spmv1", "arbb_spmv2", "spmv_ell", "spmv_dia",
-           "spmv1", "spmv2", "spmv_ell_jit", "spmv_dia_jit"]
+           "spmv1", "spmv2", "spmv_ell_jit", "spmv_dia_jit",
+           "csr_row_reduce"]
+
+
+def csr_row_reduce(matvals, indx, x):
+    """The paper's per-row ``local::reduce``: a recorded ``_for`` over
+    ``[rowpi, rowpj)`` gathering ``matvals[i] * x[indx[i]]``.
+
+    Returned as a scalar function of the row-pointer pair so it can be
+    mapped — by :func:`emap` here, or per row-shard inside the mesh-scoped
+    SpMV (:mod:`repro.distributed.numerics`)."""
+    def reduce(ri, rj):
+        def body(i, acc):
+            return acc + matvals[i] * x[indx[i]]
+        # dynamic (traced) bounds: lax.fori_loop lowers to while_loop
+        return arbb_for_dynamic(ri, rj, body, jnp.zeros((), matvals.dtype))
+    return reduce
 
 
 def arbb_spmv1(csr: CSR, invec: Dense) -> Dense:
@@ -39,14 +55,7 @@ def arbb_spmv1(csr: CSR, invec: Dense) -> Dense:
     rowpi = section(rowp, 0, nrows)      # rowp[0 .. nrows)
     rowpj = section(rowp, 1, nrows)      # rowp[1 .. nrows+1)
 
-    matvals, indx, x = csr.matvals, csr.indx, unwrap(invec)
-
-    def reduce(ri, rj):
-        def body(i, acc):
-            return acc + matvals[i] * x[indx[i]]
-        # dynamic (traced) bounds: lax.fori_loop lowers to while_loop
-        return arbb_for_dynamic(ri, rj, body, jnp.zeros((), matvals.dtype))
-
+    reduce = csr_row_reduce(csr.matvals, csr.indx, unwrap(invec))
     out = emap(reduce, in_axes=(0, 0))(rowpi, rowpj)
     return wrap(out)
 

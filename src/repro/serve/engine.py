@@ -81,6 +81,13 @@ class Engine:
                                   eos_id=eos_id, seed=seed,
                                   frontend_embeds=frontend_embeds)
 
+    #: decode steps between host-side all-done checks.  Each check is a
+    #: device sync that stalls the decode pipeline; per-token checking made
+    #: every step blocking.  ``done`` is tracked device-side in between, and
+    #: finished slots emit eos, so the only cost of a coarser period is up
+    #: to EOS_CHECK_EVERY-1 extra (cheap, fully batched) decode steps.
+    EOS_CHECK_EVERY = 8
+
     def _generate(self, tokens, *, max_new_tokens, eos_id, seed,
                   frontend_embeds):
         B = tokens.shape[0]
@@ -91,13 +98,17 @@ class Engine:
 
         outs = [nxt]
         done = jnp.zeros((B,), bool)
-        for _ in range(max_new_tokens - 1):
-            if eos_id is not None:
-                done = done | (nxt == eos_id)
-                if bool(jnp.all(done)):
-                    break
+        if eos_id is not None:
+            done = nxt == eos_id
+        for step in range(max_new_tokens - 1):
+            if (eos_id is not None and step % self.EOS_CHECK_EVERY ==
+                    self.EOS_CHECK_EVERY - 1 and bool(jnp.all(done))):
+                break
             cache, nxt, key = self._decode(self.params, cache,
                                            nxt[:, None], key)
+            if eos_id is not None:
+                nxt = jnp.where(done, eos_id, nxt)   # freeze finished slots
+                done = done | (nxt == eos_id)
             outs.append(nxt)
         out = jnp.stack(outs, axis=1)
         if out.shape[1] < max_new_tokens:   # early-stopped: pad with eos

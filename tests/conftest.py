@@ -1,6 +1,23 @@
-"""Shared fixtures.  Deliberately does NOT set xla_force_host_platform_
-device_count — tests see the real single CPU device; only launch/dryrun.py
-(run as its own process) sees 512 placeholder devices."""
+"""Shared fixtures.
+
+The suite runs with 8 forced host-platform CPU devices (the XLA flag below
+MUST be set before the first jax import — jax locks the device count at
+init) so the O3/O4 mesh paths are exercisable on CPU CI: mesh-scoped
+registry variants, shard_map SpMV/matmul/FFT, and the distributed CG all
+run for real against the fake-device mesh.  Single-chip tests are
+unaffected — with no ambient mesh, computation stays on device 0 and the
+registry's chip variants select exactly as before.  launch/dryrun.py (run
+as its own process) still forces its own 512 placeholder devices.
+"""
+import os
+
+# Before any jax import (pytest imports conftest first).  An explicit
+# caller-provided count wins — e.g. a CI shard pinning a different width.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
 import numpy as np
 import pytest
 
@@ -25,3 +42,17 @@ class _F32Rng:
 @pytest.fixture
 def rng():
     return _F32Rng(0)
+
+
+@pytest.fixture
+def mesh8():
+    """(data=8, model=1) mesh over the forced host-platform devices — the
+    O3 fixture for scope-aware selection and shard_map numerics tests."""
+    import jax
+
+    from repro.core import compat
+
+    if jax.device_count() < 8:
+        pytest.skip(f"needs 8 devices, have {jax.device_count()} "
+                    "(XLA_FLAGS set after jax init?)")
+    return compat.make_mesh((8, 1), ("data", "model"))

@@ -185,7 +185,7 @@ class TestExecLevels:
         assert C.current().level == C.ExecLevel.O2 or True
 
     def test_o3_single_device_mesh(self, rng):
-        # one CPU device -> (1, 1) mesh; results identical to O2
+        # default mesh over the forced CPU devices; results identical to O2
         a = rng.standard_normal((8, 8)).astype(np.float32)
         from repro.numerics.matmul import arbb_mxm1
         with C.use_level(C.ExecLevel.O2):

@@ -1,0 +1,187 @@
+"""The distributed numerics plane (DESIGN.md §7): scope-aware selection and
+the shard_map formulations of the four paper kernels on 8 fake devices.
+
+Contracts under test:
+  * selection — mesh-scoped variants win under use_level(O3) with an active
+    mesh, chip variants win without one, explicit ``variant=`` pins either,
+    and non-divisible shapes degrade back to chip;
+  * numerics — every mesh formulation (SpMV × 3 layouts, psum_scatter
+    matmul, transpose FFT, psum CG) matches its single-chip counterpart.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core import ExecLevel, registry, use_level
+from repro.kernels import ops
+from repro.numerics import solvers, sparse
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs the 8 forced host devices")
+
+
+def _banded(n=256, bw=31, seed=3):
+    a = sparse.banded_spd(n, bw, seed=seed)
+    rng = np.random.default_rng(seed)
+    x = C.bind(rng.standard_normal(n).astype(np.float32))
+    return a, x
+
+
+# ---------------------------------------------------------------------------
+# scope-aware selection
+# ---------------------------------------------------------------------------
+
+class TestScopeSelection:
+    def test_mesh_variant_under_mesh_chip_without(self, mesh8):
+        a, x = _banded()
+        ell = sparse.ell_from_csr(sparse.csr_from_dense(a))
+        assert registry.select("solver_spmv", ell, x).name == "ell"
+        with use_level(ExecLevel.O3, mesh8):
+            assert registry.select("solver_spmv", ell, x).name == "mesh_ell"
+        # context restored: chip again
+        assert registry.select("solver_spmv", ell, x).name == "ell"
+
+    def test_all_layouts_route_to_their_mesh_variant(self, mesh8):
+        a, x = _banded()
+        csr = sparse.csr_from_dense(a)
+        with use_level(ExecLevel.O3, mesh8):
+            assert registry.select("solver_spmv", csr, x).name == "mesh_csr"
+            assert registry.select(
+                "solver_spmv", sparse.ell_from_csr(csr), x).name == "mesh_ell"
+            assert registry.select(
+                "solver_spmv", sparse.dia_from_dense(a), x).name == "mesh_dia"
+
+    def test_explicit_variant_pins_chip_under_mesh(self, mesh8):
+        a, x = _banded()
+        dia = sparse.dia_from_dense(a)
+        with use_level(ExecLevel.O3, mesh8):
+            assert registry.select("solver_spmv", dia, x,
+                                   variant="dia").name == "dia"
+            assert registry.select("solver_spmv", dia, x,
+                                   variant="mesh_dia").name == "mesh_dia"
+            y_chip = registry.dispatch("solver_spmv", dia, x, variant="dia")
+            y_mesh = registry.dispatch("solver_spmv", dia, x,
+                                       variant="mesh_dia")
+        np.testing.assert_allclose(y_chip.read(), y_mesh.read(),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_indivisible_rows_degrade_to_chip(self, mesh8):
+        # 100 rows % 8 devices != 0 -> the mesh variant's accepts() fails
+        # and selection falls through to the chip formulation
+        a = sparse.banded_spd(100, 3, seed=1)
+        x = C.bind(np.random.default_rng(1).standard_normal(100)
+                   .astype(np.float32))
+        ell = sparse.ell_from_csr(sparse.csr_from_dense(a))
+        with use_level(ExecLevel.O3, mesh8):
+            assert registry.select("solver_spmv", ell, x).name == "ell"
+
+    def test_matmul_and_fft_scope_selection(self, mesh8):
+        a = jnp.ones((64, 64), jnp.float32)
+        z = jnp.ones(256, jnp.complex64)
+        assert registry.select("matmul", a, a).scope == "chip"
+        assert registry.select("fft", z).scope == "chip"
+        with use_level(ExecLevel.O3, mesh8):
+            assert registry.select("matmul", a, a).name == "mesh_psum"
+            assert registry.select("fft", z).name == "mesh_transpose"
+            # shapes the mesh can't host degrade gracefully
+            odd = jnp.ones((30, 30), jnp.float32)
+            assert registry.select("matmul", odd, odd).scope == "chip"
+            assert registry.select("fft", jnp.ones(40, jnp.complex64)
+                                   ).scope == "chip"
+
+    def test_mesh_scope_outranks_requested_plane(self, mesh8):
+        """Scope beats the plane request: even with 'interpret' explicitly
+        requested, the sharded formulation wins under a mesh."""
+        a = jnp.ones((64, 64), jnp.float32)
+        with use_level(ExecLevel.O3, mesh8), registry.use_backend("interpret"):
+            assert registry.select("matmul", a, a).name == "mesh_psum"
+
+
+# ---------------------------------------------------------------------------
+# numerics: mesh == chip
+# ---------------------------------------------------------------------------
+
+class TestMeshNumerics:
+    def test_mesh_spmv_matches_chip_all_layouts(self, mesh8):
+        a, x = _banded()
+        csr = sparse.csr_from_dense(a)
+        mats = [csr, sparse.ell_from_csr(csr), sparse.dia_from_dense(a)]
+        want = a.astype(np.float32) @ x.read()
+        for m in mats:
+            with use_level(ExecLevel.O3, mesh8):
+                got = registry.dispatch("solver_spmv", m, x).read()
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_mesh_matmul_matches_chip(self, mesh8, rng):
+        a = jnp.asarray(rng.standard_normal((64, 128)))
+        b = jnp.asarray(rng.standard_normal((128, 96)))
+        want = np.asarray(ops.matmul(a, b))
+        with use_level(ExecLevel.O3, mesh8):
+            got = np.asarray(ops.matmul(a, b))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_mesh_fft_matches_reference(self, mesh8, rng):
+        z = jnp.asarray(rng.standard_normal(512)
+                        + 1j * rng.standard_normal(512), jnp.complex64)
+        want = np.fft.fft(np.asarray(z))
+        with use_level(ExecLevel.O3, mesh8):
+            got = np.asarray(ops.fft(z))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)
+
+    @pytest.mark.parametrize("n,bw", [(128, 3), (256, 31), (512, 63)])
+    def test_mesh_cg_matches_chip_on_table2(self, mesh8, n, bw):
+        """Sharded CG == single-chip CG to 1e-5 on paper Table-2 systems."""
+        a = sparse.banded_spd(n, bw, seed=n + bw)
+        b = C.bind(np.random.default_rng(n).standard_normal(n)
+                   .astype(np.float32))
+        dia = sparse.dia_from_dense(a)
+        chip = solvers.cg_solve(dia, b, stop=1e-12, max_iters=2 * n)
+        with use_level(ExecLevel.O3, mesh8):
+            mesh = solvers.cg_solve(dia, b, stop=1e-12, max_iters=2 * n)
+        np.testing.assert_allclose(mesh.x.read(), chip.x.read(),
+                                   rtol=1e-5, atol=1e-5)
+        # same convergence trajectory, not just the same fixed point
+        assert int(mesh.iterations) == int(chip.iterations)
+        # and the solve actually solved the system
+        rel = (np.linalg.norm(a.astype(np.float32) @ mesh.x.read() - b.read())
+               / np.linalg.norm(b.read()))
+        assert rel < 1e-3
+
+    def test_mesh_cg_via_csr_and_ell(self, mesh8):
+        """The distributed solve composes with every solver_spmv layout."""
+        n = 256
+        a = sparse.banded_spd(n, 7, seed=9)
+        b = C.bind(np.random.default_rng(9).standard_normal(n)
+                   .astype(np.float32))
+        csr = sparse.csr_from_dense(a)
+        chip = solvers.cg_solve(csr, b, stop=1e-12, max_iters=2 * n)
+        for m in (csr, sparse.ell_from_csr(csr)):
+            with use_level(ExecLevel.O3, mesh8):
+                got = solvers.cg_solve(m, b, stop=1e-12, max_iters=2 * n)
+            np.testing.assert_allclose(got.x.read(), chip.x.read(),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_mesh_cg_rejects_mismatched_pin(self, mesh8):
+        """A pinned mesh variant that names a different layout's
+        partitioning is an error, not a silent substitution."""
+        a, _ = _banded(128, 3)
+        b = C.bind(np.random.default_rng(0).standard_normal(128)
+                   .astype(np.float32))
+        dia = sparse.dia_from_dense(a)
+        with use_level(ExecLevel.O3, mesh8):
+            with pytest.raises(ValueError, match="row-partitions"):
+                solvers.cg_solve(dia, b, backend="mesh_ell")
+
+    def test_mesh_cg_backend_pin_still_runs_chip(self, mesh8):
+        n = 128
+        a = sparse.banded_spd(n, 3, seed=2)
+        b = C.bind(np.random.default_rng(2).standard_normal(n)
+                   .astype(np.float32))
+        dia = sparse.dia_from_dense(a)
+        with use_level(ExecLevel.O3, mesh8):
+            pinned = solvers.cg_solve(dia, b, backend="dia", max_iters=2 * n)
+            auto = solvers.cg_solve(dia, b, max_iters=2 * n)
+        np.testing.assert_allclose(pinned.x.read(), auto.x.read(),
+                                   rtol=1e-5, atol=1e-5)
