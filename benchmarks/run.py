@@ -11,14 +11,17 @@ instead of the paper-figure suites — the ArBB-vs-OpenMP-vs-MKL comparison,
 reproduced for our own retargeting plane.
 
 ``--scaling-sweep`` replays the paper's speedup-vs-cores tables as
-speedup-vs-devices: the four paper kernels at 1/2/4/8 host-platform devices
-(the device count is forced before jax init), chip variants at 1, the
-mesh-scoped shard_map variants beyond.
+speedup-vs-mesh-shapes: the four paper kernels on 8 forced host-platform
+devices arranged as O2 / 8x1 / 4x2 / 2x2x2 meshes (the device count is
+forced before jax init), chip variants at O2, the mesh-scoped shard_map
+variants — including the 2-D matmul tiling and the O4 hierarchical
+reduction plans — beyond.
 
 The ``--json-out`` payload records, per suite, the row data, wall time,
 status, the kernel plane the registry resolved while it ran, and the
-device count / mesh shapes it saw, so ``BENCH_*.json`` trajectories stay
-comparable across PRs and machines — and scaling regressions are visible.
+device count / mesh shapes / axis roles it saw, so ``BENCH_*.json``
+trajectories stay comparable across PRs and machines — and scaling
+regressions are visible.
 """
 from __future__ import annotations
 
@@ -55,9 +58,16 @@ def main(argv=None) -> int:
     import jax
     from repro.core import registry
 
+    ctx = registry.select_context()
     meta = {"platform": jax.default_backend(), "jax": jax.__version__,
             "backend": registry.resolve_backend(),
-            "device_count": jax.device_count()}
+            "device_count": jax.device_count(),
+            # the ambient mesh (usually none at the CLI) and its axis roles,
+            # so payloads from mesh-scoped runs are distinguishable
+            "mesh": ctx.topology.describe() if ctx.topology else None,
+            "axis_roles": dict(zip(ctx.topology.axis_names,
+                                   ctx.topology.roles))
+            if ctx.topology else {}}
 
     if args.scaling_sweep:
         from benchmarks import scaling_sweep
@@ -66,7 +76,9 @@ def main(argv=None) -> int:
             rows = scaling_sweep.main(only=args.only)
             entry = {"status": "ok", "rows": rows,
                      "device_counts": sorted({r["devices"] for r in rows}),
-                     "meshes": sorted({r["mesh"] for r in rows})}
+                     "meshes": sorted({r["mesh"] for r in rows}),
+                     "axis_roles": sorted({r["roles"] for r in rows
+                                           if r["roles"] != "-"})}
         except Exception as e:
             print(f"[scaling_sweep] FAILED: {type(e).__name__}: {e}")
             entry = {"status": "error", "error": f"{type(e).__name__}: {e}"}

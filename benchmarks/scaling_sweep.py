@@ -1,19 +1,28 @@
 """``--scaling-sweep`` — the paper's speedup-vs-cores tables, as
-speedup-vs-devices.
+speedup-vs-mesh-shapes.
 
 The paper's headline artefact is one program text re-run under O2 and O3
 with ``ARBB_NUM_CORES`` sweeping the core count (Figs. 1-7: speedup columns
-per thread count).  This module replays that for the mesh ladder: each of
-the four paper kernels (mod2am matmul, mod2as SpMV, mod2f FFT, §3.4 CG) is
-timed at 1 device (O2, the chip baseline) and on (d, 1) ``(data, model)``
-meshes for d in {2, 4, 8} under ``use_level(O3)`` — the registry's scope
-dimension retargets every call to the mesh-scoped shard_map variants, the
-program text never changing.
+per thread count).  This module replays that for the mesh ladder — and,
+past PR 2's device-count sweep, for mesh *shapes*: each of the four paper
+kernels (mod2am matmul, mod2as SpMV, mod2f FFT, §3.4 CG) is timed at
+
+    O2      1 device, the chip baseline
+    8x1     (data=8, model=1)        — the flat O3 mesh
+    4x2     (data=4, model=2)        — O3 with a real model axis: mod2am
+                                       retargets to the 2-D (data, model)
+                                       ``mesh_psum_2d`` tiling
+    2x2x2   (pod=2, data=2, model=2) — O4: hierarchical reduction plans
+                                       (reduce-scatter intra-pod,
+                                       all-reduce inter-pod)
+
+under ``use_level`` — the registry's scope dimension and the collectives
+plane retarget every call, the program text never changing.
 
 On the CPU container the fake host-platform devices share the same silicon,
 so absolute speedups are not the claim (exactly as the paper's GFlop/s were
-Westmere-specific); the artefact is the *trajectory*: per-device-count
-timings, the variant each count selected, and the mesh shape, persisted via
+Westmere-specific); the artefact is the *trajectory*: per-mesh-shape
+timings, the variant each shape selected, and the axis roles, persisted via
 ``--json-out`` so scaling regressions show up across PRs.
 
     PYTHONPATH=src python -m benchmarks.run --scaling-sweep
@@ -27,13 +36,19 @@ import numpy as np
 
 from benchmarks.common import print_table, time_fn
 
-#: device counts swept (clamped to what the platform actually has)
-DEVICE_COUNTS = (1, 2, 4, 8)
+#: mesh shapes swept: label -> ((axis, size), ...); None = the O2 chip
+#: baseline.  Shapes needing more devices than the platform has are skipped.
+MESH_SHAPES = (
+    ("O2", None),
+    ("8x1", (("data", 8), ("model", 1))),
+    ("4x2", (("data", 4), ("model", 2))),
+    ("2x2x2", (("pod", 2), ("data", 2), ("model", 2))),
+)
 
 
 def _problems():
     """kernel name -> (timed_fn(), selected_variant_fn) on fixed inputs
-    sized so every DEVICE_COUNTS entry divides them."""
+    sized so every MESH_SHAPES entry divides them."""
     import jax.numpy as jnp
 
     import repro.core as C
@@ -73,20 +88,30 @@ def _problems():
     return problems
 
 
-def main(device_counts: Iterable[int] = DEVICE_COUNTS,
-         only: Optional[str] = None) -> list[dict]:
-    import contextlib
+def _roles_label(mesh) -> str:
+    from repro.core import topology_of
 
+    topo = topology_of(mesh)
+    if topo is None:
+        return "-"
+    # ';' separator: the table prints as CSV, so the field must stay atomic
+    return ";".join(f"{n}={r}" for n, r in zip(topo.axis_names, topo.roles))
+
+
+def main(mesh_shapes: Iterable = MESH_SHAPES,
+         only: Optional[str] = None) -> list[dict]:
     import jax
 
     from repro.core import ExecLevel, compat, use_level
 
     avail = jax.device_count()
-    counts = [d for d in device_counts if d <= avail]
-    dropped = [d for d in device_counts if d > avail]
+    shapes = [(label, spec) for label, spec in mesh_shapes
+              if spec is None or int(np.prod([s for _, s in spec])) <= avail]
+    dropped = [label for label, spec in mesh_shapes
+               if (label, spec) not in shapes]
     if dropped:
         print(f"scaling sweep: only {avail} device(s) visible; "
-              f"skipping counts {dropped} (run via benchmarks.run, which "
+              f"skipping shapes {dropped} (run via benchmarks.run, which "
               f"forces 8 host-platform devices before jax init)")
 
     problems = _problems()
@@ -95,27 +120,31 @@ def main(device_counts: Iterable[int] = DEVICE_COUNTS,
 
     rows: list[dict] = []
     base: dict[str, float] = {}
-    for d in counts:
-        if d == 1:
+    for label, spec in shapes:
+        if spec is None:
             ctx = use_level(ExecLevel.O2)          # the chip baseline
-            mesh_label = "-"
+            mesh, devices = None, 1
         else:
-            mesh = compat.make_mesh((d, 1), ("data", "model"),
-                                    devices=jax.devices()[:d])
-            ctx = use_level(ExecLevel.O3, mesh)
-            mesh_label = f"{d}x1"
+            axes = tuple(a for a, _ in spec)
+            sizes = tuple(s for _, s in spec)
+            devices = int(np.prod(sizes))
+            mesh = compat.make_mesh(sizes, axes,
+                                    devices=jax.devices()[:devices])
+            level = ExecLevel.O4 if "pod" in axes else ExecLevel.O3
+            ctx = use_level(level, mesh)
         with ctx:
             for kernel, (fn, selected) in problems.items():
                 t = time_fn(lambda: fn(), warmup=1, iters=3)
                 base.setdefault(kernel, t)
                 rows.append({
-                    "kernel": kernel, "devices": d, "mesh": mesh_label,
+                    "kernel": kernel, "devices": devices, "mesh": label,
+                    "roles": _roles_label(mesh),
                     "variant": selected(), "seconds": round(t, 6),
                     "speedup": round(base[kernel] / t, 3),
                 })
-    print_table("scaling sweep (speedup vs devices; paper's "
-                "ARBB_NUM_CORES tables, O2 -> O3 meshes)", rows,
-                ["kernel", "devices", "mesh", "variant", "seconds",
+    print_table("scaling sweep (speedup vs mesh shape; paper's "
+                "ARBB_NUM_CORES tables, O2 -> O3 -> O4 meshes)", rows,
+                ["kernel", "devices", "mesh", "roles", "variant", "seconds",
                  "speedup"])
     return rows
 

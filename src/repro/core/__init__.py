@@ -45,6 +45,7 @@ from repro.core.execlevel import ExecLevel, ExecContext, use_level, current
 from repro.core import registry
 from repro.core.registry import (dispatch, register, use_backend,
                                  resolve_backend)
+from repro.core.topology import MeshTopology, axis_roles, topology_of
 
 __all__ = [
     "Dense", "bind", "f32", "f64", "i32", "i64", "usize", "is_dense",
@@ -56,4 +57,5 @@ __all__ = [
     "call", "capture", "emap", "Closure", "CallClosure",
     "ExecLevel", "ExecContext", "use_level", "current",
     "registry", "dispatch", "register", "use_backend", "resolve_backend",
+    "MeshTopology", "axis_roles", "topology_of",
 ]

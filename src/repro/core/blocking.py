@@ -20,11 +20,23 @@ on the spot with the real arguments and the winner is persisted — ArBB's
 "optimise for the target architecture detected at runtime", made sticky.
 Measurement is skipped under a jax trace (timings there would be
 meaningless) and any candidate that fails to compile is simply dropped.
+
+Cache keys carry the ambient *mesh* (DESIGN.md §8):
+
+    op|dims|dtype|scope|mesh         e.g. matmul|k=32,m=256,n=96|float32|
+                                          mesh|pod2xdata2xmodel2
+
+A mesh-scoped variant dispatches the chip kernel per shard *inside*
+shard_map, where the best blocks depend on the local shard shape and the
+collective schedule — so entries tuned on one chip must never silently
+serve a sharded call (and vice versa).  Legacy three-part keys from older
+caches are upgraded to ``|chip|-`` on load, with a one-line note logged.
 """
 from __future__ import annotations
 
 import functools
 import json
+import logging
 import os
 import threading
 import time
@@ -34,13 +46,27 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["round_up", "AutotuneCache", "get_cache", "autotune_enabled",
-           "resolve_blocks", "blocked", "DEFAULT_CACHE_PATH"]
+           "ambient_scope_key", "resolve_blocks", "blocked",
+           "DEFAULT_CACHE_PATH"]
 
 DEFAULT_CACHE_PATH = os.path.join("results", "autotune.json")
 
 
 def round_up(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def ambient_scope_key() -> tuple[str, str]:
+    """The (scope, mesh) components of the autotune key right now:
+    ``('chip', '-')`` on one chip, ``('mesh', 'pod2xdata2xmodel2')`` under
+    an ambient O3/O4 mesh — so per-shard tuning inside shard_map never
+    aliases chip entries of the same local shape."""
+    from repro.core import registry      # lazy: keep blocking importable alone
+
+    ctx = registry.select_context()
+    if ctx.scope != "mesh" or ctx.topology is None:
+        return "chip", "-"
+    return "mesh", ctx.topology.describe()
 
 
 class AutotuneCache:
@@ -53,17 +79,34 @@ class AutotuneCache:
         self._lock = threading.Lock()
 
     @staticmethod
-    def key(op: str, dims: Mapping[str, int], dtype: str) -> str:
+    def key(op: str, dims: Mapping[str, int], dtype: str,
+            scope: str = "chip", mesh: str = "-") -> str:
         shape = ",".join(f"{k}={v}" for k, v in sorted(dims.items()))
-        return f"{op}|{shape}|{dtype}"
+        return f"{op}|{shape}|{dtype}|{scope}|{mesh}"
 
     def _load(self) -> dict[str, dict]:
         if self._data is None:
             try:
                 with open(self.path) as f:
-                    self._data = json.load(f)
+                    raw = json.load(f)
             except (FileNotFoundError, json.JSONDecodeError):
-                self._data = {}
+                raw = {}
+            # modern 5-part keys first; legacy keys upgrade via setdefault
+            # so a stale pre-mesh entry never clobbers a fresher chip entry
+            data: dict[str, dict] = {k: v for k, v in raw.items()
+                                     if k.count("|") != 2}
+            legacy = 0
+            for k, v in raw.items():
+                if k.count("|") == 2:        # pre-mesh schema: op|dims|dtype
+                    data.setdefault(f"{k}|chip|-", v)
+                    legacy += 1
+            if legacy:
+                logging.getLogger(__name__).info(
+                    "autotune cache %s: upgraded %d legacy key(s) to chip "
+                    "scope (op|dims|dtype -> op|dims|dtype|chip|-); "
+                    "mesh-scoped calls re-tune instead of silently reusing "
+                    "chip blocks", self.path, legacy)
+            self._data = data
         return self._data
 
     def lookup(self, key: str) -> Optional[dict[str, int]]:
@@ -118,9 +161,11 @@ def resolve_blocks(
     """Cache hit > fresh measurement (when enabled and possible) > defaults.
 
     ``measure(blocks) -> seconds`` runs one candidate; pass None when timing
-    is impossible (e.g. under a trace)."""
+    is impossible (e.g. under a trace).  The cache key carries the ambient
+    scope/mesh (see :func:`ambient_scope_key`): inside a shard_map variant
+    the entry is tuned per shard shape *and* per mesh shape."""
     cache = get_cache()
-    key = AutotuneCache.key(op, dims, dtype)
+    key = AutotuneCache.key(op, dims, dtype, *ambient_scope_key())
     hit = cache.lookup(key)
     if hit is not None:
         return {**defaults, **hit}

@@ -62,6 +62,7 @@ from typing import Any, Callable, Iterator, Optional
 import jax
 
 from repro.core import execlevel
+from repro.core.topology import MeshTopology, topology_of
 
 __all__ = ["Variant", "SelectContext", "OperatorRegistry", "REGISTRY",
            "select_context",
@@ -93,11 +94,22 @@ _loaded_providers: set = set()
 
 @dataclasses.dataclass(frozen=True)
 class SelectContext:
-    """What variant selection may look at: level × mesh × hardware × scope."""
+    """What variant selection may look at: level × mesh × hardware × scope
+    × mesh *topology* (axis names, sizes, roles — DESIGN.md §8), so a
+    variant can predicate on mesh rank and axis roles, not just on whether
+    a mesh exists.  E.g. ``mesh_psum_2d`` requires a non-degenerate model
+    axis; the hierarchical CG plan requires a pod axis."""
     level: execlevel.ExecLevel
     mesh: Optional[Any]
     platform: str           # jax.default_backend(): 'tpu' | 'cpu' | 'gpu'
     scope: str = "chip"     # 'mesh' when an O3/O4 mesh is ambient
+    topology: Optional[MeshTopology] = None
+
+    @property
+    def mesh_rank(self) -> int:
+        """Non-degenerate mesh axes (0 with no mesh) — a (8, 1) mesh has
+        rank 1, a (2, 2, 2) mesh rank 3."""
+        return self.topology.rank if self.topology is not None else 0
 
 
 def select_context() -> SelectContext:
@@ -105,7 +117,8 @@ def select_context() -> SelectContext:
     ctx = execlevel.current()
     scope = "mesh" if ctx.is_distributed else "chip"
     return SelectContext(level=ctx.level, mesh=ctx.mesh,
-                         platform=jax.default_backend(), scope=scope)
+                         platform=jax.default_backend(), scope=scope,
+                         topology=topology_of(ctx.mesh))
 
 
 def _plane_available(plane: Optional[str], ctx: SelectContext) -> bool:

@@ -1,8 +1,9 @@
-"""repro.distributed — sharding rules, collective helpers, and the
-mesh-scoped numerics plane.
+"""repro.distributed — sharding rules, the hierarchical collectives plane
+(axis-role reduction plans, DESIGN.md §8), and the mesh-scoped numerics.
 
 ``repro.distributed.numerics`` (DESIGN.md §7) is deliberately NOT imported
 here: it registers the mesh-scoped variants of the paper kernels as a side
 effect, and the registry lazy-loads it per op (``registry._PROVIDERS``) so
-importing this package stays light."""
-from repro.distributed import sharding  # noqa: F401
+importing this package stays light.  ``collectives`` is pure (no
+registration side effects) and is imported eagerly."""
+from repro.distributed import collectives, sharding  # noqa: F401

@@ -1,0 +1,191 @@
+"""Hierarchical collectives plane (DESIGN.md §8): axis-role-aware
+reduction plans for the mesh-scoped numerics.
+
+PR 2's distributed numerics reduce over one literal axis name (``psum(x,
+'data')``): correct on an O3 ``(data, model)`` mesh, but on an O4 ``(pod,
+data, model)`` mesh the pod axis either computes replicated or — worse for
+a naive port — joins a *flat* reduction that treats slow inter-pod DCN hops
+and fast intra-pod ICI hops identically.  That is the single-level-reduction
+wall the DBCSR Xeon Phi port hit before moving to 2-D block distributions
+(PAPERS.md), and the gradient path here already avoids it (reduce-scatter
+intra-pod, all-reduce inter-pod — DESIGN.md §4).
+
+This module gives the numerics plane the same structure.  A
+:class:`ReducePlan` is built from the ambient mesh's *topology* (axis names,
+sizes, roles — :mod:`repro.core.topology`) and emits **hierarchical
+schedules**:
+
+    psum          partial -> psum over data axes (intra-pod) -> psum over
+                  pod axes (inter-pod)
+    psum_scatter  reduce-scatter over the data axes, then all-reduce over
+                  the pod axes: every participant ends with its shard of
+                  the fully-reduced result, and only already-reduced data
+                  crosses the pod boundary
+    all_gather    gather intra-pod first, then inter-pod — the dual of the
+                  sharding order, so row shards reassemble in global order
+
+Plans are frozen/hashable, so shard_map executables cache per plan
+(``lru_cache``) exactly as the PR 2 kernels cached per mesh.  On an O3 mesh
+with no pod axis every schedule degenerates to the flat single-axis form —
+the plan layer costs nothing when the hierarchy is trivial.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.core.topology import MeshTopology, topology_of
+
+__all__ = ["ReducePlan", "reduce_plan", "ambient_plan", "flat_index"]
+
+
+def _entry(axes: tuple[str, ...]):
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def flat_index(axes: tuple[str, ...], sizes: tuple[int, ...]):
+    """This device's flat shard index over ``axes`` (outer-first), inside
+    shard_map — e.g. the global row offset of a (pod, data) row shard is
+    ``flat_index(('pod', 'data'), (2, 2)) * rows_per_shard``."""
+    idx = jnp.int32(0)
+    for name, size in zip(axes, sizes):
+        idx = idx * size + jax.lax.axis_index(name)
+    return idx
+
+
+@dataclasses.dataclass(frozen=True)
+class ReducePlan:
+    """A hierarchical reduction schedule over a mesh's batch-role axes.
+
+    ``data_axes``/``pod_axes`` are in mesh (outer-first) order; execution
+    always runs the data (intra-pod) stage first and the pod (inter-pod)
+    stage last, so the slow boundary only ever carries already-reduced
+    values.  ``mesh`` rides along so shard_map executables can be built
+    (and lru-cached) from the plan alone.
+    """
+    mesh: object                     # jax.sharding.Mesh (hashable)
+    topo: MeshTopology
+    pod_axes: tuple[str, ...]
+    data_axes: tuple[str, ...]
+
+    # -- structure ----------------------------------------------------------
+
+    @property
+    def batch_axes(self) -> tuple[str, ...]:
+        """All reduction axes, outer-first (pod-major) — the PartitionSpec
+        entry order for row shards."""
+        return self.pod_axes + self.data_axes
+
+    @property
+    def width(self) -> int:
+        """Total participants = product of the batch-axis sizes."""
+        w = 1
+        for a in self.batch_axes:
+            w *= self.topo.size(a)
+        return w
+
+    @property
+    def data_width(self) -> int:
+        w = 1
+        for a in self.data_axes:
+            w *= self.topo.size(a)
+        return w
+
+    @property
+    def hierarchical(self) -> bool:
+        """True when the schedule has a real inter-pod stage."""
+        return bool(self.pod_axes) and bool(self.data_axes)
+
+    def spec_entry(self):
+        """The PartitionSpec entry sharding a dim over the batch axes
+        (None / name / tuple, as P() expects)."""
+        return _entry(self.batch_axes)
+
+    def data_spec_entry(self):
+        """PartitionSpec entry for a dim sharded over the *data* axes only —
+        the layout :meth:`psum_scatter` leaves the scattered dim in."""
+        return _entry(self.data_axes)
+
+    def schedule(self, terminal: str = "all_reduce"
+                 ) -> tuple[tuple[str, str], ...]:
+        """The emitted schedule as (collective, axis) steps, for
+        introspection and tests.  ``terminal`` names the data-stage
+        collective of :meth:`psum_scatter` ('reduce_scatter') or of
+        :meth:`psum` ('all_reduce')."""
+        first = "reduce_scatter" if terminal == "reduce_scatter" \
+            else "all_reduce"
+        steps = [(first, a) for a in self.data_axes]
+        steps += [("all_reduce", a) for a in self.pod_axes]
+        return tuple(steps)
+
+    # -- execution (call these inside shard_map) ----------------------------
+
+    def psum(self, x):
+        """Hierarchical all-reduce: data axes (intra-pod) first, then pod."""
+        for a in self.data_axes:
+            x = jax.lax.psum(x, a)
+        for a in self.pod_axes:
+            x = jax.lax.psum(x, a)
+        return x
+
+    def psum_scatter(self, x, scatter_dimension: int = 0):
+        """Reduce-scatter intra-pod, all-reduce inter-pod.  The result is
+        sharded over the data axes along ``scatter_dimension`` and
+        replicated over the pod axes (out_specs: data entry only).  Data
+        axes scatter outermost-first so the shard layout matches
+        ``P((*data_axes,))`` along the scattered dim."""
+        for a in self.data_axes:
+            x = jax.lax.psum_scatter(x, a, scatter_dimension=scatter_dimension,
+                                     tiled=True)
+        for a in self.pod_axes:
+            x = jax.lax.psum(x, a)
+        return x
+
+    def all_gather(self, x, axis: int = 0):
+        """Reassemble batch-axis row shards: gather intra-pod first (ICI),
+        then inter-pod (DCN).  Inverse of sharding by :meth:`spec_entry`."""
+        for a in reversed(self.data_axes):
+            x = jax.lax.all_gather(x, a, axis=axis, tiled=True)
+        for a in reversed(self.pod_axes):
+            x = jax.lax.all_gather(x, a, axis=axis, tiled=True)
+        return x
+
+    def shard_index(self):
+        """This device's flat batch-shard index (pod-major), inside
+        shard_map."""
+        sizes = tuple(self.topo.size(a) for a in self.batch_axes)
+        return flat_index(self.batch_axes, sizes)
+
+
+def reduce_plan(mesh, topo: Optional[MeshTopology] = None) -> ReducePlan:
+    """Build the :class:`ReducePlan` for ``mesh`` from its axis roles.
+
+    Degenerate (size-1) axes are dropped from the schedule — a ``(data=8,
+    model=1)`` mesh plans a single flat psum over ``data``, exactly PR 2's
+    behaviour; only a real pod axis buys the hierarchical form."""
+    topo = topo if topo is not None else topology_of(mesh)
+    if topo is None:
+        raise ValueError("reduce_plan needs a mesh (got None)")
+    pod = tuple(a for a in topo.axes("pod") if topo.size(a) > 1)
+    data = tuple(a for a in topo.axes("data") if topo.size(a) > 1)
+    if not data and pod:
+        # all batch parallelism lives on pod axes: the intra-pod stage is
+        # empty and the pod stage is the whole (flat) reduction
+        pod, data = (), pod
+    return ReducePlan(mesh=mesh, topo=topo, pod_axes=pod, data_axes=data)
+
+
+def ambient_plan() -> Optional[ReducePlan]:
+    """The plan for the ambient O3/O4 mesh, or None outside one (or when
+    the mesh has no batch-role parallelism to reduce over)."""
+    ctx = registry.select_context()
+    if ctx.scope != "mesh" or ctx.topology is None:
+        return None
+    plan = reduce_plan(ctx.mesh, ctx.topology)
+    return plan if plan.batch_axes else None

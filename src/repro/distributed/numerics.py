@@ -1,88 +1,104 @@
-"""Mesh-scoped formulations of the paper's four kernels (DESIGN.md §7).
+"""Mesh-scoped formulations of the paper's four kernels (DESIGN.md §7-§8).
 
 The paper scales one unchanged program text across cores with
 ``ARBB_NUM_CORES`` (§3, O2 → O3) but stops at the shared-memory ceiling
 (§4: "ArBB is limited to shared memory systems").  This module is the rung
 past it: for each paper kernel — mod2am matmul, mod2as SpMV, mod2f FFT and
 the §3.4 CG solve — a ``shard_map`` program partitioned over the ambient
-mesh's ``data`` axis registers as a **mesh-scoped registry variant**.  The
-registry's scope dimension then selects these automatically whenever an
-O3/O4 mesh is ambient and degrades to the chip formulations without one;
-call sites never change (the RapidMind lesson: retarget the selection
-plane, not the source).
+mesh registers as a **mesh-scoped registry variant**.  The registry's scope
+dimension then selects these automatically whenever an O3/O4 mesh is
+ambient and degrades to the chip formulations without one; call sites never
+change (the RapidMind lesson: retarget the selection plane, not the source).
+
+Partitioning is **axis-role aware** (DESIGN.md §8): every formulation asks
+:func:`repro.distributed.collectives.reduce_plan` for the ambient mesh's
+hierarchical reduction schedule instead of hard-coding one axis name.  On an
+O3 ``(data, model)`` mesh the plan is the flat single-axis form PR 2
+shipped; on an O4 ``(pod, data, model)`` mesh rows shard over pod × data and
+every reduction becomes reduce/reduce-scatter intra-pod then all-reduce
+inter-pod — the pod axis computes *real* shards instead of replicas.
 
 Partitioning per kernel:
 
-    solver_spmv  row partition over 'data'.  The matrix shards by rows
-                 (ELL values/cols rows; DIA diagonal columns; CSR row-pointer
-                 sections with values/indices replicated), ``x`` is
-                 replicated, and each device runs the *chip* formulation on
-                 its rows — local kernel dispatch inside ``shard_map``.
-    matmul       K partition: A column-shards, B row-shards, each device
+    solver_spmv  row partition over the batch axes (pod × data).  The matrix
+                 shards by rows (ELL values/cols rows; DIA diagonal columns;
+                 CSR row-pointer sections with values/indices replicated),
+                 ``x`` is replicated, and each device runs the *chip*
+                 formulation on its rows — local kernel dispatch inside
+                 ``shard_map``.
+    matmul       ``mesh_psum``: K partition over the batch axes; each device
                  computes a full local MXU product and the partials
-                 ``psum_scatter`` along K into a row-sharded C.
+                 reduce-scatter intra-pod + all-reduce inter-pod into a
+                 row-sharded C.  ``mesh_psum_2d`` additionally tiles N over
+                 the model axis — the 2-D (data, model) block layout that
+                 takes mod2am past a single axis (rank-≥2 meshes only).
     fft          transpose (four-step) algorithm: view n = n1·n2 with
-                 n1 = mesh devices, row-local FFTs of length n2, twiddle
-                 scaling, an ``all_to_all`` corner turn, then column FFTs
-                 of length n1.  One global transpose instead of per-stage
-                 butterflies across devices.
-    cg           the whole O3 solve runs inside one ``shard_map``: vectors
-                 live row-sharded, SpMV gathers ``p`` once per iteration,
-                 and every dot product is a local partial + ``psum`` —
-                 see :func:`cg_mesh`, consumed by ``repro.numerics.solvers``.
-
-All variants shard over the ``data`` axis only; on an O4 ``(pod, data,
-model)`` mesh the pod axis computes replicated (hierarchical pod-level
-reduction is a ROADMAP open item).
+                 n1 = the *data subgrid* width, row-local FFTs of length n2,
+                 twiddle scaling (plan-cached, not recomputed per call), an
+                 ``all_to_all`` corner turn **within the data subgrid only**
+                 (the turn never crosses the slow pod boundary), then column
+                 FFTs of length n1.
+    cg           the whole O3/O4 solve runs inside one ``shard_map``:
+                 vectors live row-sharded over pod × data, SpMV gathers
+                 ``p`` hierarchically (intra-pod, then inter-pod) once per
+                 iteration, and every dot product is a local partial pushed
+                 through the plan's hierarchical psum — see :func:`cg_mesh`,
+                 consumed by ``repro.numerics.solvers``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import registry
 from repro.core.containers import Dense, unwrap, wrap
+from repro.core.topology import topology_of
+from repro.distributed.collectives import (ReducePlan, _entry, ambient_plan,
+                                           reduce_plan)
 from repro.numerics.sparse import CSR, DIA, ELL
 from repro.numerics.spmv import csr_row_reduce
 
-__all__ = ["cg_mesh", "mesh_matmul", "mesh_fft", "mesh_spmv",
-           "MESH_SPMV_VARIANTS", "data_size"]
-
-#: The mesh axis every variant here partitions over.
-AXIS = "data"
+__all__ = ["cg_mesh", "mesh_matmul", "mesh_matmul_2d", "mesh_fft",
+           "mesh_spmv", "MESH_SPMV_VARIANTS", "data_size"]
 
 #: The mesh-scoped solver_spmv variant names, keyed by layout.
 MESH_SPMV_VARIANTS = {CSR: "mesh_csr", ELL: "mesh_ell", DIA: "mesh_dia"}
 
 
 def data_size(mesh) -> int:
-    """Width of the 'data' axis, or 0 when the mesh can't host our shards."""
-    if mesh is None or AXIS not in mesh.axis_names:
-        return 0
-    return int(mesh.shape[AXIS])
+    """How many row shards the batch (pod × data) subgrid partitions into
+    (0 when the mesh has no batch-role axis) — kept in terms of the plan
+    layer so it can never disagree with what the formulations actually do."""
+    plan = _plan_for_mesh(mesh)
+    return plan.width if plan is not None else 0
 
 
-def _ambient_mesh():
-    ctx = registry.select_context()
-    return ctx.mesh if ctx.scope == "mesh" else None
+def _plan_for_mesh(mesh) -> Optional[ReducePlan]:
+    topo = topology_of(mesh)
+    if topo is None:
+        return None
+    plan = reduce_plan(mesh, topo)
+    return plan if plan.batch_axes else None
 
 
-def _require_mesh():
-    mesh = _ambient_mesh()
-    if data_size(mesh) == 0:
+def _require_plan() -> ReducePlan:
+    plan = ambient_plan()
+    if plan is None:
         raise RuntimeError(
             "mesh-scoped variant invoked without an ambient O3/O4 mesh "
-            "carrying a 'data' axis; enter use_level(O3) first")
-    return mesh
+            "carrying a batch-role (pod/data) axis; enter use_level(O3) first")
+    return plan
 
 
 def _mesh_available(ctx: registry.SelectContext) -> bool:
-    return data_size(ctx.mesh) > 0
+    return (ctx.topology is not None and
+            bool(reduce_plan(ctx.mesh, ctx.topology).batch_axes))
 
 
 # ---------------------------------------------------------------------------
@@ -92,17 +108,19 @@ def _mesh_available(ctx: registry.SelectContext) -> bool:
 #
 # Every mesh entry point below splits into a per-call part (pull the shard
 # arrays off the operand) and an executable built once per
-# (mesh, layout signature) via lru_cache and wrapped in jax.jit — so
+# (plan, layout signature) via lru_cache and wrapped in jax.jit — so
 # repeated dispatches hit the compilation cache exactly like the chip
 # kernels' module-level jit wrappers do, instead of retracing a fresh
-# shard_map closure per call.
+# shard_map closure per call.  Plans are frozen/hashable, so they key the
+# caches the way the bare mesh did in PR 2.
 
-#: shard_map in_specs for each layout's shard arrays (x is prepended as P()).
-_SPMV_SPECS = {
-    "ell": (P(AXIS, None), P(AXIS, None)),        # values, cols by rows
-    "csr": (P(AXIS), P(AXIS), P(), P()),          # rowpi, rowpj; vals/indx whole
-    "dia": (P(None, AXIS),),                      # diagonal columns by rows
-}
+def _spmv_specs(entry) -> dict:
+    """shard_map in_specs per layout's shard arrays (x is prepended as P())."""
+    return {
+        "ell": (P(entry, None), P(entry, None)),      # values, cols by rows
+        "csr": (P(entry), P(entry), P(), P()),        # rowpi, rowpj; rest whole
+        "dia": (P(None, entry),),                     # diag columns by rows
+    }
 
 
 def _spmv_parts(a) -> tuple[str, Any, tuple]:
@@ -116,7 +134,7 @@ def _spmv_parts(a) -> tuple[str, Any, tuple]:
     raise TypeError(f"no row partitioning for matrix type {type(a)!r}")
 
 
-def _local_spmv(kind: str, static):
+def _local_spmv(kind: str, static, plan: ReducePlan):
     """``local(loc, x_full) -> local y rows``, run *inside* shard_map.
 
     Where the layout allows, the shard is re-wrapped as a container and the
@@ -145,7 +163,7 @@ def _local_spmv(kind: str, static):
     def local(loc, xf):
         (diags,) = loc                      # (ndiags, n_local)
         n_local = diags.shape[1]
-        row0 = jax.lax.axis_index(AXIS) * n_local
+        row0 = plan.shard_index() * n_local    # flat pod-major row offset
         xp = jnp.pad(xf, (maxoff, maxoff))
         y = jnp.zeros((n_local,), diags.dtype)
         for d, off in enumerate(offsets):       # static: shifted FMAs
@@ -157,29 +175,31 @@ def _local_spmv(kind: str, static):
 
 
 @functools.lru_cache(maxsize=None)
-def _spmv_exec(mesh, kind: str, static):
-    local_fn = _local_spmv(kind, static)
+def _spmv_exec(plan: ReducePlan, kind: str, static):
+    local_fn = _local_spmv(kind, static, plan)
+    entry = plan.spec_entry()
 
     def run(xf, *loc):
         return local_fn(loc, xf)
 
-    return jax.jit(shard_map(run, mesh=mesh,
-                             in_specs=(P(),) + _SPMV_SPECS[kind],
-                             out_specs=P(AXIS), check_rep=False))
+    return jax.jit(shard_map(run, mesh=plan.mesh,
+                             in_specs=(P(),) + _spmv_specs(entry)[kind],
+                             out_specs=P(entry), check_rep=False))
 
 
 def mesh_spmv(a, invec, **_: Any) -> Dense:
     """Row-partitioned SpMV over the ambient mesh (y sharded by rows)."""
-    mesh = _require_mesh()
+    plan = _require_plan()
     kind, static, arrays = _spmv_parts(a)
-    y = _spmv_exec(mesh, kind, static)(unwrap(wrap(invec)), *arrays)
+    y = _spmv_exec(plan, kind, static)(unwrap(wrap(invec)), *arrays)
     return wrap(y)
 
 
 def _spmv_accepts(layout):
     def accepts(m, v, **_):
-        D = data_size(_ambient_mesh())
-        return (isinstance(m, layout) and D > 0 and m.shape[0] % D == 0)
+        plan = ambient_plan()
+        return (isinstance(m, layout) and plan is not None and
+                m.shape[0] % plan.width == 0)
     return accepts
 
 
@@ -188,7 +208,7 @@ def _spmv_accepts(layout):
 registry.register("solver_spmv", "mesh_dia", mesh_spmv, scope="mesh",
                   cost=4.0, available=_mesh_available,
                   accepts=_spmv_accepts(DIA),
-                  doc="row-sharded banded shifted-FMA over the data axis")
+                  doc="row-sharded banded shifted-FMA over pod x data")
 registry.register("solver_spmv", "mesh_ell", mesh_spmv, scope="mesh",
                   cost=8.0, available=_mesh_available,
                   accepts=_spmv_accepts(ELL),
@@ -200,49 +220,122 @@ registry.register("solver_spmv", "mesh_csr", mesh_spmv, scope="mesh",
 
 
 # ---------------------------------------------------------------------------
-# K-partitioned matmul: local MXU tiles + psum_scatter along K
+# K-partitioned matmul: local MXU tiles + a hierarchical reduction plan
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _matmul_exec(mesh, plane: str, blocks):
+def _matmul_exec(plan: ReducePlan, plane: str, blocks):
     block_m, block_n, block_k = blocks
+    kentry = plan.spec_entry()
 
     def local(al, bl):
         part = registry.dispatch("matmul", al, bl, variant=plane,
                                  block_m=block_m, block_n=block_n,
                                  block_k=block_k)
-        return jax.lax.psum_scatter(part, AXIS, scatter_dimension=0,
-                                    tiled=True)
+        return plan.psum_scatter(part, scatter_dimension=0)
 
-    return jax.jit(shard_map(local, mesh=mesh,
-                             in_specs=(P(None, AXIS), P(AXIS, None)),
-                             out_specs=P(AXIS, None), check_rep=False))
+    return jax.jit(shard_map(local, mesh=plan.mesh,
+                             in_specs=(P(None, kentry), P(kentry, None)),
+                             out_specs=P(plan.data_spec_entry(), None),
+                             check_rep=False))
 
 
 def mesh_matmul(a, b, *, block_m=None, block_n=None, block_k=None):
-    """C = A @ B with A column- and B row-sharded along K.
+    """C = A @ B with A column- and B row-sharded along K (pod × data).
 
     Each device multiplies its K panel with the chip kernel (pallas on TPU,
     xla elsewhere — the plane resolves exactly as on one chip), then the
-    full-size partials reduce-scatter over rows: C comes back row-sharded,
-    no device ever holds more than (M, K/D) + (K/D, N) + (M, N) floats.
+    full-size partials run the plan's hierarchical reduction: reduce-scatter
+    intra-pod, all-reduce inter-pod.  C comes back row-sharded over the data
+    axes (replicated across pods); no device ever holds more than
+    (M, K/D) + (K/D, N) + (M, N) floats.
     """
-    mesh = _require_mesh()
+    plan = _require_plan()
     plane = registry.resolve_backend()      # chip variant names == planes
-    fn = _matmul_exec(mesh, plane, (block_m, block_n, block_k))
+    fn = _matmul_exec(plan, plane, (block_m, block_n, block_k))
     return fn(unwrap(wrap(a)), unwrap(wrap(b)))
 
 
 def _matmul_accepts(a, b, **_):
-    D = data_size(_ambient_mesh())
-    return (D > 0 and getattr(a, "ndim", 0) == 2 and
+    plan = ambient_plan()
+    return (plan is not None and getattr(a, "ndim", 0) == 2 and
             getattr(b, "ndim", 0) == 2 and
-            a.shape[0] % D == 0 and a.shape[1] % D == 0)
+            a.shape[0] % plan.data_width == 0 and
+            a.shape[1] % plan.width == 0)
 
 
 registry.register("matmul", "mesh_psum", mesh_matmul, scope="mesh", cost=1.0,
                   available=_mesh_available, accepts=_matmul_accepts,
-                  doc="K-partitioned shard_map matmul, psum_scatter along K")
+                  doc="K-partitioned shard_map matmul, hierarchical "
+                      "reduce-scatter/all-reduce along K")
+
+
+@functools.lru_cache(maxsize=None)
+def _matmul2d_exec(plan: ReducePlan, model_axes: tuple, plane: str, blocks):
+    block_m, block_n, block_k = blocks
+    kentry = plan.spec_entry()
+    mentry = _entry(model_axes)
+
+    def local(al, bl):
+        part = registry.dispatch("matmul", al, bl, variant=plane,
+                                 block_m=block_m, block_n=block_n,
+                                 block_k=block_k)
+        return plan.psum_scatter(part, scatter_dimension=0)
+
+    return jax.jit(shard_map(local, mesh=plan.mesh,
+                             in_specs=(P(None, kentry), P(kentry, mentry)),
+                             out_specs=P(plan.data_spec_entry(), mentry),
+                             check_rep=False))
+
+
+def _model_axes(plan: ReducePlan) -> tuple:
+    return tuple(a for a in plan.topo.axes("model") if plan.topo.size(a) > 1)
+
+
+def mesh_matmul_2d(a, b, *, block_m=None, block_n=None, block_k=None):
+    """C = A @ B on the 2-D (data, model) block layout (mod2am past one axis).
+
+    K partitions over the batch axes (pod × data) exactly as
+    :func:`mesh_matmul`, and N additionally tiles over the model axis: each
+    device multiplies a (M, K/D) × (K/D, N/T) tile, so the local MXU work
+    *and* the partials shrink by the model width T.  The K reduction is the
+    plan's hierarchical schedule (reduce-scatter intra-pod, all-reduce
+    inter-pod), leaving C in the 2-D block layout P(data, model) — rows by
+    data shard, columns by model tile, replicated across pods.
+    """
+    plan = _require_plan()
+    plane = registry.resolve_backend()
+    fn = _matmul2d_exec(plan, _model_axes(plan), plane,
+                        (block_m, block_n, block_k))
+    return fn(unwrap(wrap(a)), unwrap(wrap(b)))
+
+
+def _matmul2d_available(ctx: registry.SelectContext) -> bool:
+    # rank >= 2 with a real model axis: the 2-D tiling needs a second
+    # non-degenerate mesh dimension to tile N over
+    return (_mesh_available(ctx) and ctx.mesh_rank >= 2 and
+            ctx.topology.extent("model") > 1)
+
+
+def _matmul2d_accepts(a, b, **_):
+    plan = ambient_plan()
+    if plan is None:
+        return False
+    t = 1
+    for ax in _model_axes(plan):
+        t *= plan.topo.size(ax)
+    return (t > 1 and getattr(a, "ndim", 0) == 2 and
+            getattr(b, "ndim", 0) == 2 and
+            a.shape[0] % plan.data_width == 0 and
+            a.shape[1] % plan.width == 0 and
+            b.shape[1] % t == 0)
+
+
+registry.register("matmul", "mesh_psum_2d", mesh_matmul_2d, scope="mesh",
+                  cost=0.5, available=_matmul2d_available,
+                  accepts=_matmul2d_accepts,
+                  doc="2-D (data, model) tiling: K over pod x data, N over "
+                      "model; hierarchical K reduction")
 
 
 # ---------------------------------------------------------------------------
@@ -250,28 +343,38 @@ registry.register("matmul", "mesh_psum", mesh_matmul, scope="mesh", cost=1.0,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _fft_exec(mesh):
-    n1 = data_size(mesh)
+def _fft_twiddles(n: int, n1: int, dtype: str) -> jax.Array:
+    """The (n1, n2) twiddle table W_n^{i1·k2} for the corner turn, built
+    once per (n, subgrid width, dtype) — the distributed analogue of the
+    chip FFT's bit-reversal/twiddle plan cache.  Committed to device so
+    repeated solves reuse the same buffer instead of re-exp'ing per call."""
+    i1 = np.arange(n1)[:, None]
+    k2 = np.arange(n // n1)[None, :]
+    return jax.device_put(jnp.asarray(
+        np.exp(-2j * np.pi * (i1 * k2) / n), dtype))
 
-    def local(al):                          # (n1/D = 1 row, n2)
-        rows, n2 = al.shape
-        n = n1 * n2
-        i1 = jax.lax.axis_index(AXIS) * rows + jnp.arange(rows)
+
+@functools.lru_cache(maxsize=None)
+def _fft_exec(plan: ReducePlan):
+    (turn_axis,) = plan.data_axes       # the corner turn stays intra-pod
+    n1 = plan.data_width
+
+    def local(al, twl):                 # (n1/D = 1 row, n2) per data shard
         b = jnp.fft.fft(al, axis=1)
-        k2 = jnp.arange(n2)
-        tw = jnp.exp(-2j * jnp.pi * (i1[:, None] * k2[None, :]) / n)
-        b = b * tw.astype(b.dtype)
-        # corner turn: (rows, n2) row shards -> (n1, n2/D) column shards
-        bt = jax.lax.all_to_all(b, AXIS, split_axis=1, concat_axis=0,
+        b = b * twl.astype(b.dtype)
+        # corner turn: (rows, n2) row shards -> (n1, n2/D) column shards,
+        # all_to_all only within the data subgrid (never across pods)
+        bt = jax.lax.all_to_all(b, turn_axis, split_axis=1, concat_axis=0,
                                 tiled=True)
-        return jnp.fft.fft(bt, axis=0)      # FFT over i1 -> k1
+        return jnp.fft.fft(bt, axis=0)  # FFT over i1 -> k1
 
-    def full(x):
+    def full(x, tw):
         n = x.shape[0]
-        # A[i1, i2] = x[i1 + n1*i2], row-sharded over devices
+        # A[i1, i2] = x[i1 + n1*i2], row-sharded over the data subgrid
         a = jnp.reshape(x, (n // n1, n1)).T
-        c = shard_map(local, mesh=mesh, in_specs=P(AXIS, None),
-                      out_specs=P(None, AXIS), check_rep=False)(a)
+        c = shard_map(local, mesh=plan.mesh,
+                      in_specs=(P(turn_axis, None), P(turn_axis, None)),
+                      out_specs=P(None, turn_axis), check_rep=False)(a, tw)
         # X[n2*k1 + k2] = C[k1, k2]: row-major flatten is the output order
         return jnp.reshape(c, (n,)).astype(x.dtype)
 
@@ -281,39 +384,49 @@ def _fft_exec(mesh):
 def mesh_fft(x):
     """Distributed DFT of a length-n vector via the transpose algorithm.
 
-    With i = i1 + n1·i2 and k = k2 + n2·k1 (n1 = device count):
+    With i = i1 + n1·i2 and k = k2 + n2·k1 (n1 = data-subgrid width):
 
         X[n2·k1 + k2] = Σ_{i1} W_{n1}^{i1·k1} · W_n^{i1·k2}
                         · Σ_{i2} W_{n2}^{i2·k2} x[i1 + n1·i2]
 
-    Each device owns one i1-row: an n2-point local FFT, the W_n^{i1·k2}
-    twiddle scale, then a single ``all_to_all`` corner turn re-shards along
-    k2 so the final n1-point FFTs are column-local.  One global transpose
-    replaces the per-stage cross-device butterflies — the split-stream
-    lesson (keep data movement structural) at mesh scale.
+    Each data shard owns one i1-row: an n2-point local FFT, the W_n^{i1·k2}
+    twiddle scale (from the plan-level twiddle cache), then a single
+    ``all_to_all`` corner turn re-shards along k2 so the final n1-point FFTs
+    are column-local.  The turn runs only within the data subgrid — pod and
+    model axes replicate, so the transpose never pays a DCN hop.  One global
+    transpose replaces the per-stage cross-device butterflies — the
+    split-stream lesson (keep data movement structural) at mesh scale.
     """
-    return _fft_exec(_require_mesh())(x)
+    plan = _require_plan()
+    tw = _fft_twiddles(x.shape[0], plan.data_width, str(x.dtype))
+    return _fft_exec(plan)(x, tw)
 
 
 def _fft_accepts(x):
-    D = data_size(_ambient_mesh())
+    plan = ambient_plan()
+    if plan is None or len(plan.data_axes) != 1:
+        return False
+    D = plan.data_width
     n = x.shape[0] if getattr(x, "ndim", 0) == 1 else 0
-    return (D > 0 and n >= 2 and (n & (n - 1)) == 0 and
+    return (D > 1 and n >= 2 and (n & (n - 1)) == 0 and
             n % D == 0 and (n // D) % D == 0)
 
 
 registry.register("fft", "mesh_transpose", mesh_fft, scope="mesh", cost=1.0,
                   available=_mesh_available, accepts=_fft_accepts,
-                  doc="four-step transpose FFT: local FFTs + one all_to_all")
+                  doc="four-step transpose FFT: local FFTs + one all_to_all "
+                      "inside the data subgrid")
 
 
 # ---------------------------------------------------------------------------
-# distributed CG: the whole solve inside one shard_map, dots as psums
+# distributed CG: the whole solve inside one shard_map, every reduction a
+# hierarchical plan
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _cg_exec(mesh, kind: str, static, max_iters: int):
-    local_fn = _local_spmv(kind, static)
+def _cg_exec(plan: ReducePlan, kind: str, static, max_iters: int):
+    local_fn = _local_spmv(kind, static, plan)
+    entry = plan.spec_entry()
 
     def run(stop, b_loc, *a_loc):
         def cond(state):
@@ -322,32 +435,34 @@ def _cg_exec(mesh, kind: str, static, max_iters: int):
 
         def body(state):
             x, r, p, r2, k = state
-            p_full = jax.lax.all_gather(p, AXIS, tiled=True)
-            ap = local_fn(a_loc, p_full)                 # local rows of A@p
-            pap = jax.lax.psum(jnp.sum(p * ap), AXIS)
+            p_full = plan.all_gather(p)          # intra-pod, then inter-pod
+            ap = local_fn(a_loc, p_full)         # local rows of A@p
+            pap = plan.psum(jnp.sum(p * ap))
             alpha = r2 / pap
             r_new = r - alpha * ap
-            r2_new = jax.lax.psum(jnp.sum(r_new * r_new), AXIS)
+            r2_new = plan.psum(jnp.sum(r_new * r_new))
             beta = r2_new / r2
             return (x + alpha * p, r_new, r_new + beta * p, r2_new, k + 1)
 
-        r2_0 = jax.lax.psum(jnp.sum(b_loc * b_loc), AXIS)
+        r2_0 = plan.psum(jnp.sum(b_loc * b_loc))
         init = (jnp.zeros_like(b_loc), b_loc, b_loc, r2_0, jnp.int32(0))
         x, r, p, r2, k = jax.lax.while_loop(cond, body, init)
         return x, r2, k
 
-    return jax.jit(shard_map(run, mesh=mesh,
-                             in_specs=(P(), P(AXIS)) + _SPMV_SPECS[kind],
-                             out_specs=(P(AXIS), P(), P()), check_rep=False))
+    return jax.jit(shard_map(run, mesh=plan.mesh,
+                             in_specs=(P(), P(entry)) + _spmv_specs(entry)[kind],
+                             out_specs=(P(entry), P(), P()), check_rep=False))
 
 
 def cg_mesh(a, bv: jax.Array, *, stop, max_iters: int, mesh=None,
             variant: Any = None) -> tuple[jax.Array, jax.Array, jax.Array]:
     """The paper's §3.4 CG iteration, row-sharded end-to-end.
 
-    Vectors (x, r, p) live as row shards; each iteration all-gathers ``p``
-    once for the local SpMV rows and reduces the two dot products with
-    ``psum`` — the only cross-device traffic.  Loop control (r2, k) is
+    Vectors (x, r, p) live as row shards over the batch axes (pod × data on
+    O4); each iteration all-gathers ``p`` hierarchically for the local SpMV
+    rows and pushes the two dot products through the plan's hierarchical
+    psum (intra-pod reduce, then one already-reduced scalar across the pod
+    boundary) — the only cross-device traffic.  Loop control (r2, k) is
     psum-replicated, so every device takes the same branch.  Returns the
     same (x, r2, k) triple as the chip core, with x row-sharded over the
     mesh.
@@ -356,7 +471,9 @@ def cg_mesh(a, bv: jax.Array, *, stop, max_iters: int, mesh=None,
     partitioning is determined by the operand layout, so a pin that names a
     different mesh formulation is an error, not a silent substitution.
     """
-    mesh = mesh if mesh is not None else _require_mesh()
+    plan = _plan_for_mesh(mesh) if mesh is not None else _require_plan()
+    if plan is None:
+        raise RuntimeError(f"mesh {mesh} has no batch-role axis to shard over")
     expected = MESH_SPMV_VARIANTS[type(a)]
     if variant is not None and variant != expected:
         raise ValueError(
@@ -364,4 +481,4 @@ def cg_mesh(a, bv: jax.Array, *, stop, max_iters: int, mesh=None,
             f"{type(a).__name__} operand row-partitions as {expected!r}")
     kind, static, arrays = _spmv_parts(a)
     stop = jnp.asarray(stop, bv.dtype)
-    return _cg_exec(mesh, kind, static, int(max_iters))(stop, bv, *arrays)
+    return _cg_exec(plan, kind, static, int(max_iters))(stop, bv, *arrays)

@@ -16,13 +16,16 @@ residual, so composing solves (or jitting around them) never forces a host
 sync — convert with ``int()`` / ``float()`` at the edge where a Python value
 is genuinely needed.
 
-The solve is also **scope-aware** (DESIGN.md §7): under ``use_level(O3)``
+The solve is also **scope-aware** (DESIGN.md §7-§8): under ``use_level(O3)``
 with an ambient mesh the registry selects a mesh-scoped ``solver_spmv``
 variant, and the whole iteration reruns as
-:func:`repro.distributed.numerics.cg_mesh` — vectors row-sharded, SpMV
-local per shard, both dot products ``psum``s.  Same program text at the
-call site; ``ARBB_NUM_CORES`` reborn as mesh shape.  An explicit
-``backend=`` still pins either formulation.
+:func:`repro.distributed.numerics.cg_mesh` — vectors row-sharded over the
+batch axes, SpMV local per shard, both dot products pushed through the
+mesh's hierarchical reduction plan (on an O4 ``(pod, data, model)`` mesh:
+reduce intra-pod over ``data``, then one already-reduced scalar across the
+``pod`` boundary).  Same program text at the call site; ``ARBB_NUM_CORES``
+reborn as mesh shape.  An explicit ``backend=`` still pins either
+formulation.
 """
 from __future__ import annotations
 
@@ -69,7 +72,8 @@ def cg_solve(a: Matrix, b, *, stop: float = 1e-10, max_iters: int = 1000,
     ``backend`` names a ``solver_spmv`` registry variant ('spmv1', 'spmv2',
     'ell', 'dia', or the mesh-scoped 'mesh_*' forms); None lets the registry
     pick by matrix layout *and* scope — under an active O3/O4 mesh the whole
-    solve runs sharded with psum dot products."""
+    solve runs sharded, with every dot product a hierarchical reduction plan
+    (intra-pod first, pod boundary last)."""
     b = wrap(b)
     bv = unwrap(b)
     selected = _selected_spmv(a, bv, backend)

@@ -1,12 +1,17 @@
-"""The distributed numerics plane (DESIGN.md §7): scope-aware selection and
-the shard_map formulations of the four paper kernels on 8 fake devices.
+"""The distributed numerics plane (DESIGN.md §7-§8): scope-aware selection
+and the shard_map formulations of the four paper kernels on 8 fake devices.
 
 Contracts under test:
   * selection — mesh-scoped variants win under use_level(O3) with an active
     mesh, chip variants win without one, explicit ``variant=`` pins either,
     and non-divisible shapes degrade back to chip;
   * numerics — every mesh formulation (SpMV × 3 layouts, psum_scatter
-    matmul, transpose FFT, psum CG) matches its single-chip counterpart.
+    matmul, transpose FFT, psum CG) matches its single-chip counterpart;
+  * hierarchy (O4, the (2,2,2) mesh) — the collectives plane emits
+    reduce-scatter-intra-pod / all-reduce-inter-pod schedules, the 2-D
+    (data, model) matmul and pod-aware CG select automatically with no
+    program-text change, degrade to the 1-D forms on O3 and to chip with
+    no mesh, and match chip numerics.
 """
 import jax
 import jax.numpy as jnp
@@ -15,6 +20,7 @@ import pytest
 
 import repro.core as C
 from repro.core import ExecLevel, registry, use_level
+from repro.distributed import collectives
 from repro.kernels import ops
 from repro.numerics import solvers, sparse
 
@@ -174,6 +180,21 @@ class TestMeshNumerics:
             with pytest.raises(ValueError, match="row-partitions"):
                 solvers.cg_solve(dia, b, backend="mesh_ell")
 
+    def test_fft_twiddle_cache_hit_across_calls(self, mesh8, rng):
+        """The corner-turn twiddle table is plan-cached, not re-exp'd per
+        call (ROADMAP item): two solves share one (n, subgrid, dtype)
+        entry."""
+        from repro.distributed import numerics as dnum
+
+        z = jnp.asarray(rng.standard_normal(512)
+                        + 1j * rng.standard_normal(512), jnp.complex64)
+        dnum._fft_twiddles.cache_clear()
+        with use_level(ExecLevel.O3, mesh8):
+            ops.fft(z)
+            ops.fft(z)
+        info = dnum._fft_twiddles.cache_info()
+        assert info.currsize == 1 and info.hits >= 1
+
     def test_mesh_cg_backend_pin_still_runs_chip(self, mesh8):
         n = 128
         a = sparse.banded_spd(n, 3, seed=2)
@@ -185,3 +206,117 @@ class TestMeshNumerics:
             auto = solvers.cg_solve(dia, b, max_iters=2 * n)
         np.testing.assert_allclose(pinned.x.read(), auto.x.read(),
                                    rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hierarchy: the O4 (2,2,2) mesh and the collectives plane (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+class TestHierarchicalO4:
+    def test_reduce_plan_schedules(self, mesh8, mesh222):
+        """O4 emits reduce-scatter intra-pod + all-reduce inter-pod; O3
+        degenerates to the flat single-axis schedule (PR 2's behaviour)."""
+        plan4 = collectives.reduce_plan(mesh222)
+        assert plan4.hierarchical
+        assert plan4.batch_axes == ("pod", "data") and plan4.width == 4
+        assert plan4.schedule("reduce_scatter") == (
+            ("reduce_scatter", "data"), ("all_reduce", "pod"))
+        plan3 = collectives.reduce_plan(mesh8)
+        assert not plan3.hierarchical
+        assert plan3.schedule("reduce_scatter") == (("reduce_scatter", "data"),)
+
+    def test_select_context_carries_topology(self, mesh222):
+        with use_level(ExecLevel.O4, mesh222):
+            ctx = registry.select_context()
+        assert ctx.mesh_rank == 3
+        assert ctx.topology.roles == ("pod", "data", "model")
+        assert ctx.topology.describe() == "pod2xdata2xmodel2"
+        assert registry.select_context().mesh_rank == 0     # restored
+
+    def test_axis_roles_declaration_drives_the_plan(self):
+        """Exotic axis names become a hierarchy via the scoped role map."""
+        from repro.core import axis_roles, compat
+
+        mesh = compat.make_mesh((2, 4), ("replica", "shard"))
+        with axis_roles(replica="pod", shard="data"):
+            plan = collectives.reduce_plan(mesh)
+        assert plan.hierarchical and plan.pod_axes == ("replica",)
+        # without the declaration, unknown names default to batch-like data
+        flat = collectives.reduce_plan(mesh)
+        assert not flat.hierarchical and flat.width == 8
+
+    def test_o4_selects_2d_matmul_and_degrades(self, mesh8, mesh222):
+        """mod2am: 2-D (data, model) variant on O4, 1-D on O3, chip with no
+        mesh — same call, no program-text change (acceptance criterion)."""
+        a = jnp.ones((64, 64), jnp.float32)
+        assert registry.select("matmul", a, a).scope == "chip"
+        with use_level(ExecLevel.O4, mesh222):
+            assert registry.select("matmul", a, a).name == "mesh_psum_2d"
+            # N not divisible by the model tile -> 1-D K-partition form
+            b_odd = jnp.ones((64, 95), jnp.float32)
+            assert registry.select("matmul", a, b_odd).name == "mesh_psum"
+            # K not divisible by pod*data -> chip
+            odd = jnp.ones((63, 63), jnp.float32)
+            assert registry.select("matmul", odd, odd).scope == "chip"
+        with use_level(ExecLevel.O3, mesh8):
+            assert registry.select("matmul", a, a).name == "mesh_psum"
+
+    def test_o4_matmul_2d_matches_chip(self, mesh222, rng):
+        a = jnp.asarray(rng.standard_normal((64, 128)))
+        b = jnp.asarray(rng.standard_normal((128, 96)))
+        want = np.asarray(ops.matmul(a, b))
+        with use_level(ExecLevel.O4, mesh222):
+            assert registry.select("matmul", a, b).name == "mesh_psum_2d"
+            got = np.asarray(ops.matmul(a, b))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_o4_spmv_all_layouts_match_dense(self, mesh222):
+        a, x = _banded()
+        csr = sparse.csr_from_dense(a)
+        mats = {"mesh_csr": csr, "mesh_ell": sparse.ell_from_csr(csr),
+                "mesh_dia": sparse.dia_from_dense(a)}
+        want = a.astype(np.float32) @ x.read()
+        for name, m in mats.items():
+            with use_level(ExecLevel.O4, mesh222):
+                assert registry.select("solver_spmv", m, x).name == name
+                got = registry.dispatch("solver_spmv", m, x).read()
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_o4_fft_matches_reference(self, mesh222, rng):
+        z = jnp.asarray(rng.standard_normal(512)
+                        + 1j * rng.standard_normal(512), jnp.complex64)
+        want = np.fft.fft(np.asarray(z))
+        with use_level(ExecLevel.O4, mesh222):
+            assert registry.select("fft", z).name == "mesh_transpose"
+            got = np.asarray(ops.fft(z))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)
+
+    @pytest.mark.parametrize("n,bw", [(256, 31)])
+    def test_o4_cg_matches_chip_on_table2(self, mesh222, n, bw):
+        """Pod-aware CG == single-chip CG to 1e-5 on the paper Table-2
+        case, same convergence trajectory (acceptance criterion)."""
+        a = sparse.banded_spd(n, bw, seed=n + bw)
+        b = C.bind(np.random.default_rng(n).standard_normal(n)
+                   .astype(np.float32))
+        dia = sparse.dia_from_dense(a)
+        chip = solvers.cg_solve(dia, b, stop=1e-12, max_iters=2 * n)
+        with use_level(ExecLevel.O4, mesh222):
+            hier = solvers.cg_solve(dia, b, stop=1e-12, max_iters=2 * n)
+        np.testing.assert_allclose(hier.x.read(), chip.x.read(),
+                                   rtol=1e-5, atol=1e-5)
+        # same trajectory up to reduction-order rounding: the hierarchical
+        # psums sum in a different order than the chip dot, so the stop test
+        # may cross the threshold one iteration apart
+        assert abs(int(hier.iterations) - int(chip.iterations)) <= 1
+        rel = (np.linalg.norm(a.astype(np.float32) @ hier.x.read() - b.read())
+               / np.linalg.norm(b.read()))
+        assert rel < 1e-3
+
+    def test_o4_indivisible_rows_degrade(self, mesh222):
+        """250 rows % 4 (pod*data) != 0 -> chip formulation."""
+        a = sparse.banded_spd(250, 3, seed=1)
+        x = C.bind(np.random.default_rng(1).standard_normal(250)
+                   .astype(np.float32))
+        ell = sparse.ell_from_csr(sparse.csr_from_dense(a))
+        with use_level(ExecLevel.O4, mesh222):
+            assert registry.select("solver_spmv", ell, x).name == "ell"

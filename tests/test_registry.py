@@ -155,6 +155,51 @@ def test_autotune_cache_roundtrips_through_json(tmp_path, monkeypatch):
     assert resolved == blocks
 
 
+def test_autotune_keys_carry_scope_and_mesh(tmp_path, monkeypatch):
+    """Mesh-scoped resolutions write ``op|dims|dtype|mesh|<shape>`` keys, so
+    per-shard tuning inside shard_map never aliases chip entries of the same
+    local shape (DESIGN.md §8)."""
+    if jax.device_count() < 8:
+        pytest.skip("needs the 8 forced host devices")
+    from repro.core import ExecLevel, compat, use_level
+
+    path = tmp_path / "at.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    defaults = {"m": 128, "n": 128, "k": 128}
+    dims = {"m": 8, "k": 8, "n": 8}
+    assert blocking.ambient_scope_key() == ("chip", "-")
+    blocking.resolve_blocks("matmul", dims, "float32", defaults,
+                            candidates=({"m": 64},), measure=lambda bl: 1.0)
+    mesh = compat.make_mesh((8, 1), ("data", "model"))
+    with use_level(ExecLevel.O3, mesh):
+        assert blocking.ambient_scope_key() == ("mesh", "data8xmodel1")
+        blocking.resolve_blocks("matmul", dims, "float32", defaults,
+                                candidates=({"m": 64},),
+                                measure=lambda bl: 1.0)
+    data = json.loads(path.read_text())
+    assert "matmul|k=8,m=8,n=8|float32|chip|-" in data
+    assert "matmul|k=8,m=8,n=8|float32|mesh|data8xmodel1" in data
+
+
+def test_autotune_legacy_keys_upgrade_to_chip_scope(tmp_path, caplog):
+    """Old three-part keys load as chip scope — a mesh-scoped resolution
+    misses (re-tunes) instead of silently reusing chip blocks — and the
+    upgrade is logged."""
+    import logging
+
+    path = tmp_path / "autotune.json"
+    path.write_text(json.dumps(
+        {"matmul|k=8,m=8,n=8|float32": {"m": 64, "n": 128, "k": 128}}))
+    cache = blocking.AutotuneCache(str(path))
+    with caplog.at_level(logging.INFO, logger="repro.core.blocking"):
+        hit = cache.lookup("matmul|k=8,m=8,n=8|float32|chip|-")
+    assert hit == {"m": 64, "n": 128, "k": 128}
+    assert cache.lookup(
+        "matmul|k=8,m=8,n=8|float32|mesh|data8xmodel1") is None
+    assert "legacy" in caplog.text
+
+
 def test_autotune_disabled_uses_defaults(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
     monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
