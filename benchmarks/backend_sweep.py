@@ -69,6 +69,23 @@ def _flash_cases() -> Iterable[tuple]:
             4.0 * b * h * l * l * d
 
 
+def _spmm_cases() -> Iterable[tuple]:
+    """One banded system in every blocked-sparse layout × an (n, 8) RHS
+    panel; ``accepts`` routes each variant to the layout it understands
+    (the spmm variant table, DESIGN.md §9)."""
+    from repro.core import bind
+    from repro import sparse as S
+    from repro.numerics.sparse import banded_spd
+    n, bw, k = 512, 31, 8
+    a = banded_spd(n, bw, seed=11).astype(np.float32)
+    rng = np.random.default_rng(11)
+    x = bind(rng.standard_normal((n, k)).astype(np.float32))
+    nnz = float(np.count_nonzero(a))
+    for fmt in S.FORMATS:
+        m = S.matrix(a, format=fmt)
+        yield f"{fmt}_n{n}bw{bw}k{k}", (m, x), {}, 2.0 * nnz * k
+
+
 def _solver_spmv_cases() -> Iterable[tuple]:
     """One banded system in every layout; ``accepts`` routes each variant to
     the layout it understands (paper Table-2 style)."""
@@ -92,6 +109,7 @@ CASES: dict[str, Callable[[], Iterable[tuple]]] = {
     "fft": _fft_cases,
     "flash_attention": _flash_cases,
     "solver_spmv": _solver_spmv_cases,
+    "spmm": _spmm_cases,
 }
 
 #: benchmark-suite name (--only) -> ops swept
@@ -100,6 +118,7 @@ SUITE_OPS = {
     "mod2as": ("spmv_ell", "spmv_dia"),
     "mod2f": ("fft",),
     "cg": ("solver_spmv",),
+    "spmm": ("spmm",),
     "roofline": (),
 }
 

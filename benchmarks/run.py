@@ -36,8 +36,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="the paper's full input sweeps (slower)")
-    ap.add_argument("--only", default=None,
-                    choices=["mod2am", "mod2as", "mod2f", "cg", "roofline"])
+    ap.add_argument("--only", "--suite", default=None,
+                    choices=["mod2am", "mod2as", "mod2f", "cg", "spmm",
+                             "roofline"])
     ap.add_argument("--backend-sweep", action="store_true",
                     help="benchmark every registered registry variant per op "
                          "and print a per-variant comparison table")
@@ -78,7 +79,12 @@ def main(argv=None) -> int:
                      "device_counts": sorted({r["devices"] for r in rows}),
                      "meshes": sorted({r["mesh"] for r in rows}),
                      "axis_roles": sorted({r["roles"] for r in rows
-                                           if r["roles"] != "-"})}
+                                           if r["roles"] != "-"}),
+                     # which storage format the statistics selected for the
+                     # sparse operands (DESIGN.md §9)
+                     "sparse_formats": sorted({r["sparse_format"]
+                                               for r in rows
+                                               if r["sparse_format"] != "-"})}
         except Exception as e:
             print(f"[scaling_sweep] FAILED: {type(e).__name__}: {e}")
             entry = {"status": "error", "error": f"{type(e).__name__}: {e}"}
@@ -112,13 +118,14 @@ def main(argv=None) -> int:
         print("\nbackend sweep complete")
         return 1 if entry["status"] == "error" else 0
 
-    from benchmarks import mod2am, mod2as, mod2f, cg, roofline_table
+    from benchmarks import mod2am, mod2as, mod2f, cg, spmm, roofline_table
 
     suites = {
         "mod2am": lambda: mod2am.main(args.full),
         "mod2as": lambda: mod2as.main(args.full),
         "mod2f": lambda: mod2f.main(args.full),
         "cg": lambda: cg.main(args.full),
+        "spmm": lambda: spmm.main(args.full),
         "roofline": lambda: _roofline(roofline_table),
     }
     if args.only:

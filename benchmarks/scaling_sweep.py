@@ -47,12 +47,16 @@ MESH_SHAPES = (
 
 
 def _problems():
-    """kernel name -> (timed_fn(), selected_variant_fn) on fixed inputs
-    sized so every MESH_SHAPES entry divides them."""
+    """kernel name -> (timed_fn(), selected_variant_fn, sparse_format) on
+    fixed inputs sized so every MESH_SHAPES entry divides them.
+    ``sparse_format`` is the storage format of the sparse operand ('-' for
+    the dense kernels) — recorded per row so ``--json-out`` trajectories
+    show which format the statistics selected (DESIGN.md §9)."""
     import jax.numpy as jnp
 
     import repro.core as C
     from repro.core import registry
+    from repro import sparse as S
     from repro.kernels import ops
     from repro.numerics import solvers, sparse
 
@@ -63,19 +67,20 @@ def _problems():
     a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
     problems["mod2am"] = (lambda: ops.matmul(a, b),
-                          lambda: registry.select("matmul", a, b).name)
+                          lambda: registry.select("matmul", a, b).name, "-")
 
     spd = sparse.banded_spd(2048, 31, seed=1)
     ell = sparse.ell_from_csr(sparse.csr_from_dense(spd))
     x = C.bind(rng.standard_normal(2048).astype(np.float32))
     problems["mod2as"] = (
         lambda: registry.dispatch("solver_spmv", ell, x),
-        lambda: registry.select("solver_spmv", ell, x).name)
+        lambda: registry.select("solver_spmv", ell, x).name,
+        S.format_of(ell))
 
     z = jnp.asarray(rng.standard_normal(4096) + 1j * rng.standard_normal(4096),
                     jnp.complex64)
     problems["mod2f"] = (lambda: ops.fft(z),
-                         lambda: registry.select("fft", z).name)
+                         lambda: registry.select("fft", z).name, "-")
 
     cg_a = sparse.dia_from_dense(sparse.banded_spd(1024, 31, seed=2))
     cg_bv = C.unwrap(C.bind(rng.standard_normal(1024).astype(np.float32)))
@@ -83,7 +88,15 @@ def _problems():
     # compiled solve, not per-call retracing
     problems["cg"] = (
         lambda: solvers.cg_jit(cg_a, cg_bv, 1e-10, 2048, None)[0],
-        lambda: solvers._selected_spmv(cg_a, cg_bv, None).name)
+        lambda: solvers._selected_spmv(cg_a, cg_bv, None).name,
+        S.format_of(cg_a))
+
+    sp_m = S.matrix(sparse.banded_spd(2048, 31, seed=3).astype(np.float32))
+    sp_x = C.bind(rng.standard_normal((2048, 8)).astype(np.float32))
+    problems["spmm"] = (
+        lambda: S.spmm(sp_m, sp_x),
+        lambda: registry.select("spmm", sp_m, sp_x).name,
+        S.format_of(sp_m))
 
     return problems
 
@@ -133,19 +146,19 @@ def main(mesh_shapes: Iterable = MESH_SHAPES,
             level = ExecLevel.O4 if "pod" in axes else ExecLevel.O3
             ctx = use_level(level, mesh)
         with ctx:
-            for kernel, (fn, selected) in problems.items():
+            for kernel, (fn, selected, fmt) in problems.items():
                 t = time_fn(lambda: fn(), warmup=1, iters=3)
                 base.setdefault(kernel, t)
                 rows.append({
                     "kernel": kernel, "devices": devices, "mesh": label,
-                    "roles": _roles_label(mesh),
+                    "roles": _roles_label(mesh), "sparse_format": fmt,
                     "variant": selected(), "seconds": round(t, 6),
                     "speedup": round(base[kernel] / t, 3),
                 })
     print_table("scaling sweep (speedup vs mesh shape; paper's "
                 "ARBB_NUM_CORES tables, O2 -> O3 -> O4 meshes)", rows,
-                ["kernel", "devices", "mesh", "roles", "variant", "seconds",
-                 "speedup"])
+                ["kernel", "devices", "mesh", "roles", "variant",
+                 "sparse_format", "seconds", "speedup"])
     return rows
 
 

@@ -1,0 +1,132 @@
+"""Blocked-sparse suite — SpMM across the four format classes + block-CG.
+
+Beyond the paper: mod2as stops at single-vector SpMV (Fig. 2); the
+scalable sparse workload is SpMM — sparse matrix × dense multi-RHS panel —
+with the storage format chosen *from the data* (DESIGN.md §9).  This suite
+times ``sparse.spmm`` on one representative matrix per format class
+(banded → DIA, clustered blocks → BSR, uniform rows → ELL, ragged → CSR;
+the auto-selector's pick is recorded per row) at two panel widths, and the
+multi-RHS block-CG solver on paper Table-2 banded systems.
+
+    PYTHONPATH=src python -m benchmarks.run --only spmm
+    PYTHONPATH=src python -m benchmarks.run --only spmm --json-out out.json
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import repro.core as C
+from repro import sparse as S
+from repro.numerics import solvers
+from repro.numerics.sparse import banded_spd, random_sparse
+from benchmarks.common import time_fn, print_table
+
+#: (class label, builder(n) -> dense f32) — one matrix per format class.
+N = 1024
+RHS_WIDTHS = (8, 64)
+
+# block-CG configs: paper Table-2 (n, bw) + RHS count
+CG_BLOCK = [(256, 31, 4), (512, 63, 4), (512, 127, 8)]
+
+
+def _banded(n):
+    return banded_spd(n, 31, seed=1).astype(np.float32)
+
+
+def _blocked(n, block=8, fill=0.06):
+    rng = np.random.default_rng(2)
+    nb = n // block
+    a = np.zeros((n, n), np.float32)
+    occ = rng.choice(nb * nb, size=max(1, int(nb * nb * fill)), replace=False)
+    for p in occ:
+        i, j = divmod(int(p), nb)
+        a[i * block:(i + 1) * block, j * block:(j + 1) * block] = \
+            rng.standard_normal((block, block))
+    return a
+
+
+def _uniform(n, width=16):
+    rng = np.random.default_rng(3)
+    a = np.zeros((n, n), np.float32)
+    for i in range(n):
+        cols = rng.choice(n, size=width, replace=False)
+        a[i, cols] = rng.standard_normal(width)
+    return a
+
+
+def _ragged(n):
+    a = random_sparse(n, 2.0, seed=4).astype(np.float32)
+    rng = np.random.default_rng(5)
+    for i in rng.choice(n, size=4, replace=False):   # a few dense rows
+        a[i, :] = rng.standard_normal(n)
+    return a
+
+
+CLASSES = (("banded", _banded), ("blocked", _blocked),
+           ("uniform", _uniform), ("ragged", _ragged))
+
+
+def run(full: bool = False) -> list[dict]:
+    rows = []
+    n = N if full else N // 2
+    rng = np.random.default_rng(0)
+    for label, build in CLASSES:
+        a = build(n)
+        m = S.matrix(a)                    # statistics-driven format choice
+        fmt = S.format_of(m)
+        nnz = int(np.count_nonzero(a))
+        for k in RHS_WIDTHS:
+            x = C.bind(rng.standard_normal((n, k)).astype(np.float32))
+            y = S.spmm(m, x).read()        # correctness vs the dense oracle
+            err = float(np.abs(y - a @ x.read()).max())
+            t = time_fn(lambda v: S.spmm(m, v), x)
+            flops = 2.0 * nnz * k
+            rows.append({"kernel": "spmm", "case": label, "format": fmt,
+                         "n": n, "k": k, "nnz": nnz,
+                         "max_err": f"{err:.1e}", "seconds": round(t, 6),
+                         "gflops": round(flops / t / 1e9, 4)})
+    for cn, bw, k in (CG_BLOCK if full else CG_BLOCK[:2]):
+        a = banded_spd(cn, bw, seed=cn + bw).astype(np.float32)
+        m = S.matrix(a)
+        b = C.bind(np.random.default_rng(cn).standard_normal((cn, k))
+                   .astype(np.float32))
+        res = solvers.cg_block_solve(m, b, stop=1e-12, max_iters=2 * cn)
+        x = res.x.read()
+        rel = float((np.linalg.norm(a @ x - b.read(), axis=0)
+                     / np.linalg.norm(b.read(), axis=0)).max())
+        t = time_fn(lambda bb: solvers.cg_block_solve(
+            m, bb, stop=1e-12, max_iters=2 * cn).x, b, warmup=1, iters=3)
+        nnz = int(np.count_nonzero(a))
+        it = int(res.iterations)
+        rows.append({"kernel": "cg_block", "case": f"n{cn}bw{bw}",
+                     "format": S.format_of(m), "n": cn, "k": k, "nnz": nnz,
+                     "max_err": f"{rel:.1e}", "seconds": round(t, 5),
+                     "gflops": round(2.0 * nnz * k * it / t / 1e9, 4),
+                     "iters": it})
+    return rows
+
+
+def validate(rows: list[dict]) -> dict:
+    by_case = {r["case"]: r["format"] for r in rows if r["kernel"] == "spmm"}
+    checks = {
+        "selector": by_case == {"banded": "dia", "blocked": "bsr",
+                                "uniform": "ell", "ragged": "csr"},
+        "spmm_matches_oracle": all(float(r["max_err"]) < 1e-3
+                                   for r in rows if r["kernel"] == "spmm"),
+        "block_cg_converged": all(float(r["max_err"]) < 1e-5
+                                  for r in rows if r["kernel"] == "cg_block"),
+    }
+    return {"formats": by_case, "checks": checks}
+
+
+def main(full: bool = False):
+    rows = run(full)
+    print_table("spmm (blocked-sparse plane: per-format SpMM + block-CG)",
+                rows, ["kernel", "case", "format", "n", "k", "nnz",
+                       "max_err", "seconds", "gflops", "iters"])
+    print("validation:", validate(rows)["checks"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -84,7 +84,9 @@ _PROVIDERS = {
     "spmv_dia": ("repro.kernels.ops",),
     "fft": ("repro.kernels.ops", "repro.distributed.numerics"),
     "flash_attention": ("repro.kernels.ops",),
-    "solver_spmv": ("repro.numerics.spmv", "repro.distributed.numerics"),
+    "solver_spmv": ("repro.numerics.spmv", "repro.distributed.numerics",
+                    "repro.sparse.spmm"),
+    "spmm": ("repro.sparse.spmm", "repro.distributed.numerics"),
 }
 
 #: provider modules already imported (an op's chip module may register it

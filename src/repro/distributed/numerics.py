@@ -58,14 +58,16 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import registry
 from repro.core.containers import Dense, unwrap, wrap
+from repro.kernels import ref
 from repro.core.topology import topology_of
 from repro.distributed.collectives import (ReducePlan, _entry, ambient_plan,
                                            reduce_plan)
 from repro.numerics.sparse import CSR, DIA, ELL
-from repro.numerics.spmv import csr_row_reduce
+from repro.numerics.spmv import csr_row_reduce, dia_panel
 
 __all__ = ["cg_mesh", "mesh_matmul", "mesh_matmul_2d", "mesh_fft",
-           "mesh_spmv", "MESH_SPMV_VARIANTS", "data_size"]
+           "mesh_spmv", "mesh_spmm", "MESH_SPMV_VARIANTS", "data_size",
+           "block_cyclic_perm"]
 
 #: The mesh-scoped solver_spmv variant names, keyed by layout.
 MESH_SPMV_VARIANTS = {CSR: "mesh_csr", ELL: "mesh_ell", DIA: "mesh_dia"}
@@ -198,7 +200,10 @@ def mesh_spmv(a, invec, **_: Any) -> Dense:
 def _spmv_accepts(layout):
     def accepts(m, v, **_):
         plan = ambient_plan()
-        return (isinstance(m, layout) and plan is not None and
+        # 1-D x only: a 2-D multi-RHS x belongs to the spmm plane (the
+        # solver_spmv 'spmm' route), whose mesh variant shards the same way
+        return (isinstance(m, layout) and
+                getattr(unwrap(v), "ndim", 1) == 1 and plan is not None and
                 m.shape[0] % plan.width == 0)
     return accepts
 
@@ -217,6 +222,81 @@ registry.register("solver_spmv", "mesh_csr", mesh_spmv, scope="mesh",
                   cost=15.0, available=_mesh_available,
                   accepts=_spmv_accepts(CSR),
                   doc="row-pointer sections sharded; per-row recorded _for")
+
+
+# ---------------------------------------------------------------------------
+# row-partitioned SpMM (the blocked-sparse plane, DESIGN.md §9): same row
+# sharding as mesh_spmv, X panel replicated, panel-widened local kernels
+# ---------------------------------------------------------------------------
+
+def _local_spmm(kind: str, static, plan: ReducePlan):
+    """``local(loc, x_panel) -> local y rows (rows_local, k)`` — the SpMM
+    dual of :func:`_local_spmv`: each device's rows of A multiply the whole
+    replicated (n, k) RHS panel."""
+    if kind == "ell":
+        def local(loc, xf):
+            vals, cols = loc
+            return ref.spmm_ell_ref(vals, cols, xf)     # row-gather × panel
+        return local
+
+    if kind == "csr":
+        def local(loc, xf):
+            rowpi, rowpj, matvals, indx = loc
+
+            def reduce(ri, rj):
+                def body(i, acc):
+                    return acc + matvals[i] * xf[indx[i], :]
+                return jax.lax.fori_loop(
+                    ri, rj, body, jnp.zeros((xf.shape[1],), matvals.dtype))
+            return jax.vmap(reduce)(rowpi, rowpj)
+        return local
+
+    offsets = static                                # "dia"
+
+    def local(loc, xf):
+        (diags,) = loc                      # (ndiags, n_local)
+        row0 = plan.shard_index() * diags.shape[1]
+        return dia_panel(diags, offsets, xf, row0=row0)
+    return local
+
+
+@functools.lru_cache(maxsize=None)
+def _spmm_exec(plan: ReducePlan, kind: str, static):
+    local_fn = _local_spmm(kind, static, plan)
+    entry = plan.spec_entry()
+
+    def run(xf, *loc):
+        return local_fn(loc, xf)
+
+    return jax.jit(shard_map(run, mesh=plan.mesh,
+                             in_specs=(P(),) + _spmv_specs(entry)[kind],
+                             out_specs=P(entry, None), check_rep=False))
+
+
+def mesh_spmm(a, x, **_: Any) -> Dense:
+    """Row-partitioned SpMM over the ambient mesh: the matrix shards by
+    rows over pod × data exactly as :func:`mesh_spmv`, the (n, k) RHS panel
+    replicates, and each device runs the panel-widened local formulation on
+    its rows — Y comes back row-sharded.  BSR stays a chip formulation
+    (its per-block-row raggedness has no even row shard in general), so a
+    blocked operand degrades gracefully under a mesh."""
+    plan = _require_plan()
+    kind, static, arrays = _spmv_parts(a)
+    y = _spmm_exec(plan, kind, static)(unwrap(wrap(x)), *arrays)
+    return wrap(y)
+
+
+def _spmm_accepts(m, v, **_):
+    plan = ambient_plan()
+    return (isinstance(m, (CSR, ELL, DIA)) and
+            getattr(unwrap(v), "ndim", 0) == 2 and plan is not None and
+            m.shape[0] % plan.width == 0)
+
+
+registry.register("spmm", "mesh_spmm", mesh_spmm, scope="mesh", cost=1.0,
+                  available=_mesh_available, accepts=_spmm_accepts,
+                  doc="row-sharded SpMM over pod x data; RHS panel "
+                      "replicated (CSR/ELL/DIA; BSR stays chip)")
 
 
 # ---------------------------------------------------------------------------
@@ -292,6 +372,44 @@ def _model_axes(plan: ReducePlan) -> tuple:
     return tuple(a for a in plan.topo.axes("model") if plan.topo.size(a) > 1)
 
 
+#: Column-panel unit for the block-cyclic N assignment: one MXU tile.
+N_PANEL = 128
+
+
+@functools.lru_cache(maxsize=None)
+def block_cyclic_perm(n: int, t: int, panel: int = N_PANEL):
+    """Block-cyclic column assignment of N panels across ``t`` model tiles.
+
+    Returns ``(perm, inv)`` such that after ``b[:, perm]`` the *contiguous*
+    model sharding P(..., model) hands shard ``s`` the panels ``s, s+t,
+    s+2t, ...`` — panels deal out round-robin instead of in one contiguous
+    run, so a tall-skinny N (many panels) spreads its leading/trailing
+    structure across the model axis instead of loading it onto one shard
+    (the DBCSR 2-D block-cyclic lesson; ROADMAP item).  ``inv`` restores
+    global column order on the result.  Returns ``None`` when the cyclic
+    layout degenerates to the contiguous one (``n`` doesn't tile into
+    ``t × panel`` panels, or exactly one panel per shard)."""
+    if t <= 1 or n % (panel * t) != 0 or n // panel == t:
+        return None
+    npanels = n // panel
+    order = np.concatenate([
+        np.arange(p * panel, (p + 1) * panel)
+        for s in range(t) for p in range(s, npanels, t)])
+    inv = np.argsort(order)
+    return order, inv
+
+
+@functools.lru_cache(maxsize=None)
+def _matmul2d_cyclic_exec(plan: ReducePlan, model_axes: tuple, plane: str,
+                          blocks):
+    inner = _matmul2d_exec(plan, model_axes, plane, blocks)
+
+    def run(av, bv, perm, inv):
+        return inner(av, bv[:, perm])[:, inv]
+
+    return jax.jit(run)
+
+
 def mesh_matmul_2d(a, b, *, block_m=None, block_n=None, block_k=None):
     """C = A @ B on the 2-D (data, model) block layout (mod2am past one axis).
 
@@ -302,12 +420,29 @@ def mesh_matmul_2d(a, b, *, block_m=None, block_n=None, block_k=None):
     plan's hierarchical schedule (reduce-scatter intra-pod, all-reduce
     inter-pod), leaving C in the 2-D block layout P(data, model) — rows by
     data shard, columns by model tile, replicated across pods.
+
+    N panels are assigned **block-cyclically** (:func:`block_cyclic_perm`):
+    B's columns are dealt out in :data:`N_PANEL`-wide panels round-robin
+    across the model tiles, and C's columns gather back to global order —
+    both permutations traced inside one jitted executable so XLA fuses
+    them with the matmul (on the cyclic path the *returned* C is therefore
+    in global column order, not the raw P(data, model) block layout).
+    Tall-skinny N no longer load-imbalances rank-≥2 meshes; when N doesn't
+    tile into panels the layout degenerates to the contiguous assignment
+    unchanged.
     """
     plan = _require_plan()
     plane = registry.resolve_backend()
-    fn = _matmul2d_exec(plan, _model_axes(plan), plane,
-                        (block_m, block_n, block_k))
-    return fn(unwrap(wrap(a)), unwrap(wrap(b)))
+    av, bv = unwrap(wrap(a)), unwrap(wrap(b))
+    t = 1
+    for ax in _model_axes(plan):
+        t *= plan.topo.size(ax)
+    key = (plan, _model_axes(plan), plane, (block_m, block_n, block_k))
+    cyclic = block_cyclic_perm(bv.shape[1], t, block_n or N_PANEL)
+    if cyclic is None:
+        return _matmul2d_exec(*key)(av, bv)
+    perm, inv = cyclic
+    return _matmul2d_cyclic_exec(*key)(av, bv, perm, inv)
 
 
 def _matmul2d_available(ctx: registry.SelectContext) -> bool:

@@ -8,8 +8,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["matmul_ref", "spmv_ell_ref", "spmv_dia_ref", "fft_stage_ref",
-           "fft_ref", "attention_ref", "attention_chunked"]
+__all__ = ["matmul_ref", "spmv_ell_ref", "spmv_dia_ref", "spmm_ell_ref",
+           "spmm_bsr_ref", "fft_stage_ref", "fft_ref", "attention_ref",
+           "attention_chunked"]
 
 
 def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
@@ -31,6 +32,30 @@ def spmv_dia_ref(diags: jax.Array, offsets: tuple[int, ...],
         valid = (src >= 0) & (src < n)
         y = y + diags[d] * jnp.where(valid, x[jnp.clip(src, 0, n - 1)], 0)
     return y
+
+
+def spmm_ell_ref(values: jax.Array, cols: jax.Array, x: jax.Array
+                 ) -> jax.Array:
+    """ELL × dense panel: y[i, :] = sum_w values[i, w] * x[cols[i, w], :]."""
+    return jnp.einsum("iw,iwk->ik", values, x[cols])
+
+
+def spmm_bsr_ref(values: jax.Array, cols: jax.Array, rowp: jax.Array,
+                 x: jax.Array) -> jax.Array:
+    """BSR × dense panel via per-block dense products + block-row
+    segment-sum (the mathematically transparent formulation)."""
+    from repro.numerics.sparse import csr_row_ids
+
+    nblocks, bs, _ = values.shape
+    n, k = x.shape
+    nbrows = rowp.shape[0] - 1
+    if nblocks == 0:
+        return jnp.zeros((nbrows * bs, k), values.dtype)
+    xb = x.reshape(n // bs, bs, k)
+    prod = jnp.einsum("pij,pjk->pik", values, xb[cols])     # (nblocks, bs, k)
+    seg = csr_row_ids(rowp, nblocks)
+    out = jax.ops.segment_sum(prod, seg, num_segments=nbrows)
+    return out.reshape(nbrows * bs, k)
 
 
 def fft_stage_ref(data_re, data_im, tw_re, tw_im):

@@ -40,7 +40,8 @@ from repro.core import registry
 from repro.numerics import spmv as spmv_mod  # noqa: F401  (registers solver_spmv)
 from repro.numerics.sparse import CSR, DIA, ELL
 
-__all__ = ["cg_solve", "jacobi_solve", "gauss_seidel_solve", "CGResult"]
+__all__ = ["cg_solve", "cg_block_solve", "jacobi_solve",
+           "gauss_seidel_solve", "CGResult", "BlockCGResult"]
 
 Matrix = Union[CSR, ELL, DIA]
 
@@ -136,6 +137,66 @@ def _cg_jit_core(a: Matrix, bv, stop, max_iters: int, backend: Optional[str]):
 
 
 cg_jit = call(_cg_jit_core, static_argnums=(3, 4))
+
+
+@dataclasses.dataclass
+class BlockCGResult:
+    """Device-resident block-CG result: ``x`` is the (n, k) solution panel,
+    ``residual_sq`` the per-RHS final squared residuals (k,)."""
+    x: Dense
+    iterations: jax.Array       # int32 scalar, on device
+    residual_sq: jax.Array      # (k,) f32, on device
+
+
+def cg_block_solve(a, b, *, stop: float = 1e-10, max_iters: int = 1000,
+                   variant: Optional[str] = None) -> BlockCGResult:
+    """Multi-RHS conjugate gradients (block CG, O'Leary 1980) on the SpMM
+    plane — the §3.4 listing widened to a (n, k) right-hand-side panel.
+
+    One iteration does *one* SpMM (``S = A @ P``, each matrix element
+    amortised over k FMAs — the arithmetic-intensity win the blocked-sparse
+    plane exists for, DESIGN.md §9) and replaces CG's scalar α/β with k×k
+    Gram solves, so the k systems share one Krylov space and converge in
+    fewer iterations than k independent solves:
+
+        γ = (PᵀS)⁻¹ (RᵀR)          X += P γ        R' = R − S γ
+        δ = (RᵀR)⁻¹ (R'ᵀR')        P  = R' + P δ
+
+    The SpMM is a registry dispatch: under an ambient O3/O4 mesh it runs
+    row-sharded (``mesh_spmm``); ``variant=`` pins a formulation.  Stops
+    when every RHS column's squared residual is below ``stop``.  Classic
+    block-CG caveat: the k×k solves assume the residual block keeps full
+    rank (true until well past engineering tolerances for SPD systems;
+    deflation is a ROADMAP follow-up).
+    """
+    bm = unwrap(wrap(b))
+    if bm.ndim != 2:
+        raise ValueError(f"cg_block_solve wants a (n, k) RHS panel, got "
+                         f"shape {bm.shape}; use cg_solve for one vector")
+
+    def aspmm(p):
+        return unwrap(registry.dispatch("spmm", a, wrap(p), variant=variant))
+
+    def cond(state):
+        x, r, p, rtr, k = state
+        return jnp.logical_and(jnp.max(jnp.diagonal(rtr)) > stop,
+                               k < max_iters)
+
+    def body(state):
+        x, r, p, rtr, k = state
+        s = aspmm(p)                                   # S = A @ P   (n, k)
+        gamma = jnp.linalg.solve(p.T @ s, rtr)         # k×k
+        x_new = x + p @ gamma
+        r_new = r - s @ gamma
+        rtr_new = r_new.T @ r_new
+        delta = jnp.linalg.solve(rtr, rtr_new)
+        p_new = r_new + p @ delta
+        return (x_new, r_new, p_new, rtr_new, k + 1)
+
+    init = (jnp.zeros_like(bm), bm, bm, bm.T @ bm, jnp.int32(0))
+    x, r, p, rtr, k = arbb_while(cond, body, init)
+    return BlockCGResult(x=wrap(x), iterations=k,
+                         residual_sq=jnp.diagonal(rtr))
 
 
 def jacobi_solve(a_dense, b, *, iters: int = 200):

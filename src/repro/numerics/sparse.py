@@ -23,7 +23,15 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["CSR", "ELL", "DIA", "random_sparse", "banded_spd",
-           "csr_from_dense", "ell_from_csr", "dia_from_dense"]
+           "csr_from_dense", "ell_from_csr", "dia_from_dense",
+           "csr_row_ids"]
+
+
+def csr_row_ids(rowp: jax.Array, count: int) -> jax.Array:
+    """Row id per stored entry: entry ``p`` belongs to the row ``i`` with
+    ``rowp[i] <= p < rowp[i+1]`` — the segment ids every flat CSR-style
+    formulation (element or block granular) feeds to ``segment_sum``."""
+    return jnp.searchsorted(rowp[1:], jnp.arange(count), side="right")
 
 
 @jax.tree_util.register_pytree_node_class

@@ -21,11 +21,11 @@ import jax.numpy as jnp
 
 from repro.core import Dense, arbb_for, call, emap, section, shift, unwrap, wrap
 from repro.core import registry
-from repro.numerics.sparse import CSR, DIA, ELL
+from repro.numerics.sparse import CSR, DIA, ELL, csr_row_ids
 
 __all__ = ["arbb_spmv1", "arbb_spmv2", "spmv_ell", "spmv_dia",
            "spmv1", "spmv2", "spmv_ell_jit", "spmv_dia_jit",
-           "csr_row_reduce"]
+           "csr_row_reduce", "dia_panel"]
 
 
 def csr_row_reduce(matvals, indx, x):
@@ -78,8 +78,7 @@ def arbb_spmv2(csr: CSR, invec: Dense) -> Dense:
     nrows = csr.shape[0]
     x = unwrap(invec)
     prod = csr.matvals * x[csr.indx]                      # elementwise stream
-    # segment ids from rowp: row i owns [rowp[i], rowp[i+1])
-    seg = jnp.searchsorted(csr.rowp[1:], jnp.arange(prod.shape[0]), side="right")
+    seg = csr_row_ids(csr.rowp, prod.shape[0])
     out = jax.ops.segment_sum(prod, seg, num_segments=nrows)
     return wrap(out)
 
@@ -105,6 +104,26 @@ def spmv_dia(dia: DIA, invec: Dense) -> Dense:
     return y
 
 
+def dia_panel(diags, offsets: tuple, xf, row0=0):
+    """``y[i, :] = Σ_d diags[d][i] · xf[row0 + i + offsets[d], :]`` — the
+    DIA shifted-FMA loop over a 2-D RHS panel, the one encoding of the DIA
+    alignment convention shared by the chip spmm variant (``row0=0``;
+    repro.sparse.spmm) and the row-sharded mesh local (``row0`` = this
+    shard's global row offset; repro.distributed.numerics).  The offsets
+    are static, so the loop unrolls at trace time; out-of-range reads
+    resolve to 0 via edge padding."""
+    n_local = diags.shape[1]
+    maxoff = max((abs(o) for o in offsets), default=0)
+    xp = jnp.pad(xf, ((maxoff, maxoff), (0, 0)))
+    y = jnp.zeros((n_local, xf.shape[1]),
+                  jnp.result_type(diags.dtype, xf.dtype))
+    for d, off in enumerate(offsets):
+        seg = jax.lax.dynamic_slice(
+            xp, (row0 + off + maxoff, 0), (n_local, xf.shape[1]))
+        y = y + diags[d][:, None] * seg
+    return y
+
+
 spmv1 = call(arbb_spmv1)
 spmv2 = call(arbb_spmv2)
 spmv_ell_jit = call(spmv_ell)
@@ -114,11 +133,13 @@ spmv_dia_jit = call(spmv_dia)
 # The solver-facing SpMV variants (the paper runs arbb_spmv1/arbb_spmv2; we
 # add the layout-specialised paths).  These are DSL-level formulations
 # (plane=None — they lower under any kernel plane); ``accepts`` keys on the
-# matrix layout so auto-selection picks the strongest formulation the
-# operand admits, and costs order CSR variants by the paper's own measured
-# ranking (spmv2's contiguity rewrite beats spmv1).
+# matrix layout — and on a 1-D x: a 2-D multi-RHS x routes to the spmm
+# plane instead (repro.sparse.spmm) — so auto-selection picks the strongest
+# formulation the operand admits, and costs order CSR variants by the
+# paper's own measured ranking (spmv2's contiguity rewrite beats spmv1).
 def _takes(layout):
-    return lambda m, v, **_: isinstance(m, layout)
+    return lambda m, v, **_: (isinstance(m, layout)
+                              and getattr(unwrap(v), "ndim", 1) == 1)
 
 
 registry.register("solver_spmv", "spmv1", arbb_spmv1, cost=40.0,

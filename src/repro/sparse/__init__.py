@@ -1,0 +1,27 @@
+"""repro.sparse — the blocked-sparse plane (DESIGN.md §9).
+
+One import for the four storage formats (CSR / ELL / DIA / BSR), the
+construction-time statistics, the statistics-driven format auto-selector,
+and the SpMM entry point:
+
+    A = sparse.matrix(a_dense)        # stats measured once; format chosen
+    Y = sparse.spmm(A, X)             # retargets by layout, plane and mesh
+
+The paper's property — *the program text never changes* — applied to data:
+banded inputs run the gather-free DIA path, clustered blocks the MXU BSR
+path, uniform rows ELL, everything else the CSR oracle; under an ambient
+O3/O4 mesh the same two lines run row-sharded on the collectives plane.
+"""
+from repro.sparse.formats import (BSR, CSR, DIA, ELL, bsr_from_csr,
+                                  bsr_from_dense, csr_from_bsr)
+from repro.sparse.selector import FORMATS, format_of, matrix, select_format
+from repro.sparse.spmm import spmm
+from repro.sparse.stats import SparseStats, sparse_stats
+
+__all__ = [
+    "BSR", "CSR", "DIA", "ELL",
+    "bsr_from_dense", "bsr_from_csr", "csr_from_bsr",
+    "SparseStats", "sparse_stats",
+    "FORMATS", "select_format", "matrix", "format_of",
+    "spmm",
+]

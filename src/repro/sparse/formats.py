@@ -1,0 +1,119 @@
+"""BSR (block-CSR) storage + host-side converters (DESIGN.md §9).
+
+The paper's mod2as path stops at element-granular formats (CSR → ELL/DIA);
+the scalable form for matrices with *clustered* nonzeros is **blocked**
+storage — the DBCSR lesson (Bethune et al., PAPERS.md): store dense
+``bs×bs`` tiles so the inner SpMM step is an MXU-sized dense FMA instead of
+an element gather.  ``BSR`` is CSR lifted to block granularity:
+
+    values  (nblocks, bs, bs)   the occupied dense tiles
+    cols    (nblocks,)          block-column index of each tile
+    rowp    (nbrows+1,)         block-row pointers (CSR's rowp, per tile row)
+
+Construction is host-side numpy (data-pipeline work); the container holds
+device arrays and re-exports the element formats so ``repro.sparse`` is the
+one import for all four layouts.  Every constructed BSR carries its
+:class:`~repro.sparse.stats.SparseStats` (advisory — attached outside the
+pytree so jit caches key on shapes, not on per-matrix statistics).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.numerics.sparse import (CSR, DIA, ELL, csr_from_dense,  # noqa: F401
+                                   dia_from_dense, ell_from_csr)
+from repro.sparse.stats import DEFAULT_BLOCK, SparseStats, sparse_stats
+
+__all__ = ["BSR", "bsr_from_dense", "bsr_from_csr", "csr_from_bsr",
+           "CSR", "ELL", "DIA"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BSR:
+    """Block-CSR: CSR over dense ``block×block`` tiles."""
+    values: jax.Array            # (nblocks, block, block)
+    cols: jax.Array              # (nblocks,) int32 — block-column indices
+    rowp: jax.Array              # (nbrows+1,) int32 — block-row pointers
+    shape: tuple[int, int]
+    block: int
+    # advisory, not part of the pytree: lost across flatten/unflatten on
+    # purpose so per-matrix statistics never fragment jit caches
+    stats: Optional[SparseStats] = dataclasses.field(
+        default=None, compare=False)
+
+    def tree_flatten(self):
+        return (self.values, self.cols, self.rowp), (self.shape, self.block)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, shape=aux[0], block=aux[1])
+
+    @property
+    def nblocks(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def nnz(self) -> int:
+        """Stored entries (block-padded — includes explicit zeros)."""
+        return self.nblocks * self.block * self.block
+
+    def todense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=np.asarray(self.values).dtype)
+        vals = np.asarray(self.values)
+        cols = np.asarray(self.cols)
+        rowp = np.asarray(self.rowp)
+        bs = self.block
+        for i in range(len(rowp) - 1):
+            for p in range(rowp[i], rowp[i + 1]):
+                j = cols[p]
+                out[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs] += vals[p]
+        return out
+
+
+def bsr_from_dense(a: np.ndarray, block: int = DEFAULT_BLOCK,
+                   dtype=None, stats: Optional[SparseStats] = None) -> BSR:
+    """Gather the occupied ``block×block`` tiles of ``a`` (both dims must
+    tile evenly — the selector refuses BSR otherwise).  ``stats`` skips
+    the measurement when the caller already scanned the matrix (the
+    selector did, to pick BSR in the first place)."""
+    a = np.asarray(a)
+    if dtype is not None:
+        a = a.astype(dtype)
+    n, m = a.shape
+    if n % block or m % block:
+        raise ValueError(f"shape {a.shape} does not tile by block={block}")
+    nbrows, nbcols = n // block, m // block
+    tiles = a.reshape(nbrows, block, nbcols, block).transpose(0, 2, 1, 3)
+    occupied = np.any(tiles != 0, axis=(2, 3))          # (nbrows, nbcols)
+    vals, cols, rowp = [], [], [0]
+    for i in range(nbrows):
+        (js,) = np.nonzero(occupied[i])
+        vals.extend(tiles[i, j] for j in js)
+        cols.extend(js.tolist())
+        rowp.append(len(cols))
+    values = (np.stack(vals) if vals
+              else np.zeros((0, block, block), dtype=a.dtype))
+    return BSR(
+        values=jnp.asarray(values),
+        cols=jnp.asarray(np.array(cols, dtype=np.int32)),
+        rowp=jnp.asarray(np.array(rowp, dtype=np.int32)),
+        shape=(n, m), block=block,
+        stats=stats if stats is not None else sparse_stats(a, block=block),
+    )
+
+
+def bsr_from_csr(csr: CSR, block: int = DEFAULT_BLOCK) -> BSR:
+    """CSR → BSR via the dense staging array (host-side; the repo's inputs
+    are all small enough that the O(n²) staging is data-pipeline noise)."""
+    return bsr_from_dense(csr.todense(), block=block)
+
+
+def csr_from_bsr(bsr: BSR) -> CSR:
+    """BSR → CSR (drops the explicit zeros block padding introduced)."""
+    return csr_from_dense(bsr.todense())

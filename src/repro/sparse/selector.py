@@ -1,0 +1,96 @@
+"""Statistics-driven format auto-selection (DESIGN.md §9).
+
+``matrix(a)`` is the one constructor call sites write; the rules below pick
+the storage format the *data shape* admits, mirroring the cost ordering of
+the ``spmm`` registry variants (strongest kernel first).  The program text
+never changes when the data does — the ArBB retargeting property, extended
+from hardware to matrix structure:
+
+    DIA   banded: the non-empty diagonals are few and dense
+          (``dia_fill`` ≥ 0.5, ``ndiags`` bounded — the shifted-FMA path
+          is gather-free but unrolls one FMA per diagonal at trace time)
+    BSR   clustered: the occupied block×block tiles are mostly dense
+          (``block_fill`` ≥ 0.5 and the shape tiles evenly) — each SpMM
+          step is an MXU-sized dense block FMA
+    ELL   uniform rows: padding to the longest row wastes < 2×
+          (``ell_fill`` ≥ 0.5) — the rectangular gather-multiply-reduce
+    CSR   everything else: the paper's 3-array format, XLA segment-sum
+          oracle — always correct, never the fastest
+
+An explicit ``format=`` overrides the rules exactly like an explicit
+``variant=`` overrides registry dispatch (selection rule 1, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import numpy as np
+
+from repro.numerics.sparse import CSR, DIA, ELL, csr_from_dense, \
+    dia_from_dense, ell_from_csr
+from repro.sparse.formats import BSR, bsr_from_dense
+from repro.sparse.stats import DEFAULT_BLOCK, SparseStats, sparse_stats
+
+__all__ = ["FORMATS", "select_format", "matrix", "format_of"]
+
+#: Auto-selectable formats, strongest-kernel-first (the selector's ranking).
+FORMATS = ("dia", "bsr", "ell", "csr")
+
+#: Minimum storage efficiency for a specialised format to beat CSR.
+MIN_FILL = 0.5
+
+#: DIA unrolls one shifted FMA per diagonal at trace time; cap the program.
+MAX_DIAGS = 512
+
+Matrix = Union[CSR, ELL, DIA, BSR]
+
+
+def select_format(stats: SparseStats) -> str:
+    """The format the statistics admit (see module docstring for rules)."""
+    n, m = stats.shape
+    if n == m and stats.ndiags and stats.ndiags <= MAX_DIAGS \
+            and stats.dia_fill >= MIN_FILL:
+        return "dia"
+    if n % stats.block == 0 and m % stats.block == 0 \
+            and stats.block_fill >= MIN_FILL:
+        return "bsr"
+    if stats.ell_fill >= MIN_FILL:
+        return "ell"
+    return "csr"
+
+
+def matrix(a: np.ndarray, format: str = "auto", block: int = DEFAULT_BLOCK,
+           dtype=None) -> Matrix:
+    """Build the sparse container for ``a``, auto-selected from its
+    statistics (``format="auto"``) or pinned (``format="dia"|...``).
+
+    The returned container carries the measured :class:`SparseStats` as an
+    advisory ``.stats`` attribute (outside the pytree)."""
+    a = np.asarray(a)
+    if dtype is not None:
+        a = a.astype(dtype)
+    stats = sparse_stats(a, block=block)
+    fmt = select_format(stats) if format == "auto" else format
+    if fmt == "dia":
+        out: Matrix = dia_from_dense(a)
+    elif fmt == "bsr":
+        out = bsr_from_dense(a, block=block, stats=stats)
+    elif fmt == "ell":
+        out = ell_from_csr(csr_from_dense(a))
+    elif fmt == "csr":
+        out = csr_from_dense(a)
+    else:
+        raise ValueError(f"unknown sparse format {fmt!r}; choose from "
+                         f"{FORMATS} or 'auto'")
+    if getattr(out, "stats", None) is None:
+        object.__setattr__(out, "stats", stats)    # advisory, frozen-safe
+    return out
+
+
+def format_of(a: Matrix) -> str:
+    """The format name of a container (the selector's vocabulary)."""
+    for name, layout in (("dia", DIA), ("bsr", BSR), ("ell", ELL),
+                         ("csr", CSR)):
+        if isinstance(a, layout):
+            return name
+    raise TypeError(f"not a sparse container: {type(a)!r}")

@@ -1,0 +1,212 @@
+"""``spmm`` — sparse matrix × dense multi-RHS panel, as a registry op.
+
+The op's variant table *is* the format auto-selector's execution layer
+(DESIGN.md §9): each storage format registers the strongest formulation it
+admits, ``accepts`` keys on the container layout (+ a 2-D RHS), and costs
+mirror the selector's ranking — so ``sparse.spmm(A, X)`` retargets by the
+matrix shape of the data exactly as the kernels retarget by hardware:
+
+    dia       banded shifted FMAs over the whole panel — gather-free
+    bsr       block-tile FMAs on the MXU (Pallas; kernels/spmm.py), with
+              interpret/xla planes for validation off-TPU
+    ell       rectangular row-gather × RHS panel (Pallas + planes)
+    csr       the 3-array oracle via one XLA segment-sum — always correct,
+              never the fastest (the paper's CSR baseline, panel-widened)
+    mesh_spmm row-sharded over pod × data on the collectives plane
+              (repro.distributed.numerics) — preferred under an O3/O4 mesh
+
+This module also closes the solver seam: ``solver_spmv`` gains a low-cost
+``spmm`` route that fires only when ``x`` carries a trailing RHS dimension
+(2-D) — single-vector call sites never see it — plus the BSR single-vector
+lift, so ``cg_solve`` works on blocked matrices too.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Dense, unwrap, wrap
+from repro.core import registry
+from repro.core.blocking import blocked, round_up
+from repro.kernels import ref
+from repro.kernels import spmm as spmm_k
+from repro.numerics import spmv as spmv_mod
+from repro.numerics.sparse import CSR, DIA, ELL, csr_row_ids
+from repro.sparse.formats import BSR
+
+__all__ = ["spmm"]
+
+
+def _panel_takes(layout):
+    """accepts: the matrix layout matches and x is a 2-D RHS panel."""
+    def accepts(m, v, **_):
+        return isinstance(m, layout) and getattr(unwrap(v), "ndim", 0) == 2
+    return accepts
+
+
+# ---------------------------------------------------------------------------
+# DIA: banded shifted panel-FMAs (plane=None — a jnp program, trace-time
+# unrolled over the static offsets; the strongest formulation, zero gathers)
+# ---------------------------------------------------------------------------
+
+_dia_core = jax.jit(spmv_mod.dia_panel, static_argnames=("offsets",))
+
+
+def _spmm_dia(a: DIA, x, **_) -> Dense:
+    return wrap(_dia_core(a.diags, a.offsets, unwrap(wrap(x))))
+
+
+# ---------------------------------------------------------------------------
+# BSR: block-tile MXU FMAs (pallas/interpret) + segment-sum reference (xla)
+# ---------------------------------------------------------------------------
+
+def _pad_rhs(k: int) -> tuple[int, int]:
+    """(padded k, panel size): lane-aligned panels for wide RHS, minimal
+    padding for skinny ones (block-CG's small k)."""
+    if k >= 128:
+        kp = round_up(k, 128)
+        return kp, 128
+    kp = round_up(k, 8)
+    return kp, kp
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _bsr_kernel_call(values, cols, rowp, xv, interpret):
+    n, k = xv.shape
+    kp, bn = _pad_rhs(k)
+    xpad = jnp.pad(xv, ((0, 0), (0, kp - k)))
+    out = spmm_k.spmm_bsr(values, cols, rowp, xpad, block_rhs=bn,
+                          interpret=interpret)
+    return out[:, :k]
+
+
+def _bsr_variant(interpret):
+    def impl(a: BSR, x, **_) -> Dense:
+        xv = unwrap(wrap(x))
+        return wrap(_bsr_kernel_call(a.values, a.cols, a.rowp, xv, interpret))
+    return impl
+
+
+_spmm_bsr_ref_jit = jax.jit(ref.spmm_bsr_ref)
+
+
+def _spmm_bsr_xla(a: BSR, x, **_) -> Dense:
+    return wrap(_spmm_bsr_ref_jit(a.values, a.cols, a.rowp, unwrap(wrap(x))))
+
+
+# ---------------------------------------------------------------------------
+# ELL: rectangular row-gather × panel (pallas/interpret via blocked(), xla)
+# ---------------------------------------------------------------------------
+
+def _ell_inner(values, cols, x, *, blocks, interpret):
+    return spmm_k.spmm_ell(values, cols, x, block_rows=blocks["rows"],
+                           block_width=blocks["width"],
+                           block_rhs=blocks["rhs"], interpret=interpret)
+
+
+_ell_blocked = blocked(
+    "spmm_ell", _ell_inner,
+    pad={0: ("rows", "width"), 1: ("rows", "width"), 2: (None, "rhs")},
+    out=("rows", "rhs"),
+    defaults={"rows": 8, "width": 128, "rhs": 128},
+    candidates=({"rows": 16}, {"rows": 32}, {"rhs": 256}),
+)
+
+
+def _ell_variant(interpret):
+    def impl(a: ELL, x, **_) -> Dense:
+        xv = unwrap(wrap(x))
+        return wrap(_ell_blocked(a.values, a.cols, xv, interpret=interpret))
+    return impl
+
+
+_spmm_ell_ref_jit = jax.jit(ref.spmm_ell_ref)
+
+
+def _spmm_ell_xla(a: ELL, x, **_) -> Dense:
+    return wrap(_spmm_ell_ref_jit(a.values, a.cols, unwrap(wrap(x))))
+
+
+# ---------------------------------------------------------------------------
+# CSR: the 3-array oracle, panel-widened (one gather-multiply over the nnz
+# stream + a row segment-sum — arbb_spmv2's flat form with a trailing k dim)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _csr_core(matvals, indx, rowp, xv):
+    prod = matvals[:, None] * xv[indx, :]                  # (nnz, k)
+    seg = csr_row_ids(rowp, prod.shape[0])
+    return jax.ops.segment_sum(prod, seg, num_segments=rowp.shape[0] - 1)
+
+
+def _spmm_csr(a: CSR, x, **_) -> Dense:
+    return wrap(_csr_core(a.matvals, a.indx, a.rowp, unwrap(wrap(x))))
+
+
+# costs mirror the selector's strongest-first ranking (selector.FORMATS);
+# accepts discriminates by layout, so cross-layout order is documentation.
+registry.register("spmm", "dia", _spmm_dia, cost=4.0,
+                  accepts=_panel_takes(DIA),
+                  doc="banded shifted panel-FMAs, gather-free")
+registry.register("spmm", "bsr", _bsr_variant(False), plane="pallas",
+                  cost=5.0, accepts=_panel_takes(BSR),
+                  doc="block-tile MXU FMAs (kernels/spmm.py)")
+registry.register("spmm", "bsr_interpret", _bsr_variant(True),
+                  plane="interpret", cost=105.0, accepts=_panel_takes(BSR))
+registry.register("spmm", "bsr_xla", _spmm_bsr_xla, plane="xla", cost=5.5,
+                  accepts=_panel_takes(BSR),
+                  doc="per-block dense products + block-row segment-sum")
+registry.register("spmm", "ell", _ell_variant(False), plane="pallas",
+                  cost=6.0, accepts=_panel_takes(ELL),
+                  doc="row-gather × RHS panel (kernels/spmm.py)")
+registry.register("spmm", "ell_interpret", _ell_variant(True),
+                  plane="interpret", cost=106.0, accepts=_panel_takes(ELL))
+registry.register("spmm", "ell_xla", _spmm_ell_xla, plane="xla", cost=6.5,
+                  accepts=_panel_takes(ELL))
+registry.register("spmm", "csr", _spmm_csr, cost=20.0,
+                  accepts=_panel_takes(CSR),
+                  doc="3-array oracle: nnz-stream gather + segment-sum")
+
+
+def spmm(a, x, *, variant: Optional[str] = None) -> Dense:
+    """``A @ X`` for a sparse container ``A`` and a dense (n, k) panel.
+
+    Auto-selects the formulation from the container's layout (the
+    statistics-driven choice happened at :func:`repro.sparse.matrix`
+    construction); under an ambient O3/O4 mesh the row-sharded
+    ``mesh_spmm`` is preferred.  ``variant=`` pins one (DESIGN.md §6)."""
+    xw = wrap(x)
+    if unwrap(xw).ndim != 2:
+        raise ValueError(f"spmm wants a 2-D RHS panel, got shape "
+                         f"{unwrap(xw).shape}; use solver_spmv for vectors")
+    return registry.dispatch("spmm", a, xw, variant=variant)
+
+
+# ---------------------------------------------------------------------------
+# the solver seam: multi-RHS solves route solver_spmv through this plane
+# ---------------------------------------------------------------------------
+
+def _route_accepts(m, v, **_):
+    nd = getattr(unwrap(v), "ndim", 0)
+    # 2-D x on any layout; BSR additionally lifts 1-D so cg_solve works on
+    # blocked matrices (no element-granular solver_spmv variant takes BSR)
+    return (isinstance(m, (CSR, ELL, DIA, BSR)) and nd == 2) or \
+        (isinstance(m, BSR) and nd == 1)
+
+
+def _route_spmm(m, v, **_) -> Dense:
+    xv = unwrap(wrap(v))
+    if xv.ndim == 1:
+        return wrap(unwrap(registry.dispatch("spmm", m, wrap(xv[:, None])))
+                    [:, 0])
+    return registry.dispatch("spmm", m, wrap(v))
+
+
+registry.register("solver_spmv", "spmm", _route_spmm, cost=1.0,
+                  accepts=_route_accepts,
+                  doc="multi-RHS seam: 2-D x (or BSR) routes to the spmm "
+                      "plane; chip dispatch falls back to the XLA oracles "
+                      "off-TPU")

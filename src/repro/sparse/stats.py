@@ -1,0 +1,101 @@
+"""``SparseStats`` — the matrix-shape statistics that drive format selection.
+
+The paper's retargeting story is *the program text never changes*: ArBB
+re-optimises one source for whatever hardware is ambient (§3).  The
+blocked-sparse plane (DESIGN.md §9) extends that from hardware to **data**:
+``repro.sparse.matrix(a)`` measures the matrix once, at construction, and
+the selector picks the storage format (DIA / ELL / BSR / CSR) the *shape of
+the data* admits — banded systems take the gather-free diagonal path,
+uniform rows the rectangular ELL path, clustered blocks the MXU BSR path —
+without the call site naming any of them.  This is the data-side analogue
+of Deveci et al.'s observation (PAPERS.md) that no single sparse layout
+wins across structures.
+
+Everything here is host-side numpy: statistics are data-pipeline work
+computed once per matrix, never kernel work.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["SparseStats", "sparse_stats"]
+
+#: Default probe block size for the block-fill statistic (BSR block edge).
+DEFAULT_BLOCK = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseStats:
+    """Shape statistics of one sparse matrix, computed at construction.
+
+    Fill ratios are *storage efficiencies* in [0, 1]: nnz divided by the
+    slots the candidate format would materialise.  1.0 means the format is
+    padding-free for this matrix; the selector thresholds on them
+    (:mod:`repro.sparse.selector`).
+    """
+    shape: tuple[int, int]
+    nnz: int
+    density: float            # nnz / (n*m)
+    row_nnz_mean: float
+    row_nnz_max: int
+    row_nnz_std: float
+    bandwidth: int            # max |i - j| over the nonzeros
+    ndiags: int               # number of non-empty diagonals
+    dia_fill: float           # nnz / (ndiags * n)        — DIA efficiency
+    ell_fill: float           # nnz / (nrows * row_max)   — ELL efficiency
+    block: int                # probed block edge (BSR candidate)
+    nblocks: int              # occupied block×block tiles
+    block_fill: float         # nnz / (nblocks * block²)  — BSR efficiency
+
+    @property
+    def row_nnz_cv(self) -> float:
+        """Coefficient of variation of nnz/row — 0 for perfectly uniform
+        rows, large for ragged/power-law rows (the ELL-hostile shape)."""
+        return self.row_nnz_std / self.row_nnz_mean if self.row_nnz_mean \
+            else 0.0
+
+    def describe(self) -> str:
+        return (f"n={self.shape[0]} nnz={self.nnz} density={self.density:.4f} "
+                f"bw={self.bandwidth} ndiags={self.ndiags} "
+                f"dia_fill={self.dia_fill:.2f} ell_fill={self.ell_fill:.2f} "
+                f"block_fill={self.block_fill:.2f}@{self.block}")
+
+
+def sparse_stats(a: np.ndarray, block: int = DEFAULT_BLOCK) -> SparseStats:
+    """Measure ``a`` (dense host array) once; see :class:`SparseStats`.
+
+    ``block`` is the BSR candidate block edge the block-fill statistic
+    probes.  When the shape doesn't tile by ``block`` the trailing partial
+    blocks still count as occupied-if-nonzero (the selector separately
+    refuses BSR for non-divisible shapes).
+    """
+    a = np.asarray(a)
+    n, m = a.shape
+    mask = a != 0
+    nnz = int(mask.sum())
+    per_row = mask.sum(axis=1)
+    rows, cols = np.nonzero(mask)
+    if nnz:
+        bandwidth = int(np.abs(rows - cols).max())
+        ndiags = int(np.unique(cols.astype(np.int64) - rows).size)
+    else:
+        bandwidth, ndiags = 0, 0
+    row_max = int(per_row.max()) if n else 0
+    # occupied block×block tiles (ceil-divided edges)
+    nb = int(np.unique(
+        (rows // block) * (-(-m // block)) + (cols // block)).size) if nnz \
+        else 0
+    return SparseStats(
+        shape=(n, m), nnz=nnz,
+        density=nnz / (n * m) if n * m else 0.0,
+        row_nnz_mean=float(per_row.mean()) if n else 0.0,
+        row_nnz_max=row_max,
+        row_nnz_std=float(per_row.std()) if n else 0.0,
+        bandwidth=bandwidth, ndiags=ndiags,
+        dia_fill=nnz / (ndiags * n) if ndiags else 0.0,
+        ell_fill=nnz / (n * row_max) if row_max else 0.0,
+        block=block, nblocks=nb,
+        block_fill=nnz / (nb * block * block) if nb else 0.0,
+    )

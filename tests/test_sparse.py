@@ -1,0 +1,351 @@
+"""The blocked-sparse plane (DESIGN.md §9): BSR storage, construction-time
+statistics, the format auto-selector, the spmm registry op, the mesh-scoped
+SpMM, multi-RHS block-CG, and the block-cyclic N assignment satellite.
+
+Contracts under test:
+  * storage — BSR ↔ dense/CSR round-trips are exact; SparseStats measures
+    what it claims (bandwidth, fills, occupied blocks);
+  * selection — the statistics pick DIA/ELL/BSR/CSR on banded/uniform/
+    blocked/ragged inputs, ``format=`` and ``variant=`` override;
+  * numerics — ``sparse.spmm`` matches the dense oracle on every format
+    class (f32, 1e-5), through every plane (xla + interpret kernels);
+  * solver seam — a 2-D x routes ``solver_spmv`` to the spmm plane while
+    1-D call sites select exactly as before;
+  * mesh — ``mesh_spmm`` is selected under O3/O4 and matches chip spmm;
+    indivisible rows and BSR operands degrade to chip;
+  * block-CG — converges on paper Table-2 banded systems to 1e-5 with one
+    shared Krylov space (iterations ≲ single-vector CG);
+  * block-cyclic — ``mesh_psum_2d`` deals N panels round-robin across the
+    model axis with unchanged numerics (ROADMAP item).
+"""
+import jax
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core import ExecLevel, registry, use_level
+from repro import sparse as S
+from repro.numerics import solvers
+from repro.numerics.sparse import banded_spd, random_sparse
+
+
+def _banded(n=256, bw=15, seed=1):
+    return banded_spd(n, bw, seed=seed).astype(np.float32)
+
+
+def _blocked(n=256, block=8, nblocks=60, seed=2):
+    rng = np.random.default_rng(seed)
+    nb = n // block
+    a = np.zeros((n, n), np.float32)
+    for p in rng.choice(nb * nb, size=nblocks, replace=False):
+        i, j = divmod(int(p), nb)
+        a[i * block:(i + 1) * block, j * block:(j + 1) * block] = \
+            rng.standard_normal((block, block))
+    return a
+
+
+def _uniform(n=256, width=12, seed=3):
+    rng = np.random.default_rng(seed)
+    a = np.zeros((n, n), np.float32)
+    for i in range(n):
+        a[i, rng.choice(n, size=width, replace=False)] = \
+            rng.standard_normal(width)
+    return a
+
+
+def _ragged(n=256, seed=4):
+    a = random_sparse(n, 2.0, seed=seed).astype(np.float32)
+    rng = np.random.default_rng(seed)
+    for i in rng.choice(n, size=3, replace=False):
+        a[i, :] = rng.standard_normal(n)      # a few dense rows defeat ELL
+    return a
+
+
+def _rhs(n, k=8, seed=0):
+    return np.random.default_rng(seed).standard_normal((n, k)) \
+        .astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# storage + statistics
+# ---------------------------------------------------------------------------
+
+class TestFormatsAndStats:
+    def test_bsr_dense_round_trip(self):
+        a = _blocked()
+        bsr = S.bsr_from_dense(a)
+        np.testing.assert_array_equal(bsr.todense(), a)
+
+    def test_bsr_csr_round_trip(self):
+        a = _banded(128, 7)
+        csr = S.matrix(a, format="csr")
+        bsr = S.bsr_from_csr(csr)
+        np.testing.assert_array_equal(bsr.todense(), a)
+        np.testing.assert_allclose(S.csr_from_bsr(bsr).todense(), a)
+
+    def test_bsr_requires_divisible_shape(self):
+        with pytest.raises(ValueError, match="tile"):
+            S.bsr_from_dense(np.ones((100, 100), np.float32), block=8)
+
+    def test_stats_measure_the_matrix(self):
+        a = _banded(128, 3)
+        st = S.sparse_stats(a)
+        assert st.shape == (128, 128)
+        assert st.nnz == int(np.count_nonzero(a))
+        assert st.bandwidth == 3 and st.ndiags == 7
+        assert st.dia_fill > 0.9
+        a2 = _blocked(128, 8, 30)
+        st2 = S.sparse_stats(a2, block=8)
+        assert st2.block_fill == pytest.approx(1.0)
+        assert st2.nblocks == 30
+
+    def test_stats_attached_at_construction(self):
+        m = S.matrix(_banded())
+        assert isinstance(m.stats, S.SparseStats)
+        bsr = S.bsr_from_dense(_blocked())
+        assert bsr.stats is not None and bsr.stats.block_fill > 0.9
+
+    def test_bsr_pytree_round_trip_drops_advisory_stats(self):
+        bsr = S.bsr_from_dense(_blocked(64, 8, 10))
+        leaves, treedef = jax.tree_util.tree_flatten(bsr)
+        back = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert back.shape == bsr.shape and back.block == bsr.block
+        assert back.stats is None          # advisory: not in the pytree
+
+
+# ---------------------------------------------------------------------------
+# the auto-selector
+# ---------------------------------------------------------------------------
+
+class TestSelector:
+    @pytest.mark.parametrize("build,expect", [
+        (_banded, "dia"), (_blocked, "bsr"),
+        (_uniform, "ell"), (_ragged, "csr")])
+    def test_statistics_pick_the_format(self, build, expect):
+        m = S.matrix(build())
+        assert S.format_of(m) == expect
+        assert S.select_format(S.sparse_stats(build())) == expect
+
+    def test_explicit_format_overrides(self):
+        a = _banded()
+        assert S.format_of(S.matrix(a, format="bsr")) == "bsr"
+        assert S.format_of(S.matrix(a, format="csr")) == "csr"
+        with pytest.raises(ValueError, match="unknown sparse format"):
+            S.matrix(a, format="coo")
+
+    def test_spmm_variant_override(self):
+        a = _banded()
+        x = _rhs(a.shape[0])
+        m = S.matrix(a, format="bsr")
+        auto = S.spmm(m, x).read()
+        pinned = S.spmm(m, x, variant="bsr_xla").read()
+        np.testing.assert_allclose(auto, pinned, rtol=1e-6, atol=1e-6)
+        with pytest.raises(ValueError, match="no variant"):
+            S.spmm(m, x, variant="nope")
+
+
+# ---------------------------------------------------------------------------
+# spmm numerics: every format class vs the dense oracle (f32, 1e-5)
+# ---------------------------------------------------------------------------
+
+class TestSpmmNumerics:
+    @pytest.mark.parametrize("build", [_banded, _blocked, _uniform, _ragged])
+    def test_auto_selected_spmm_matches_dense(self, build):
+        a = build()
+        x = _rhs(a.shape[0])
+        y = S.spmm(S.matrix(a), x).read()
+        np.testing.assert_allclose(y, a @ x, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("fmt", ["dia", "bsr", "ell", "csr"])
+    def test_every_format_on_the_same_system(self, fmt):
+        a = _banded(128, 7)
+        x = _rhs(128, 4)
+        y = S.spmm(S.matrix(a, format=fmt), x).read()
+        np.testing.assert_allclose(y, a @ x, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("fmt", ["bsr", "ell"])
+    def test_interpret_kernels_match_oracle(self, fmt):
+        """The Pallas SpMM kernels (kernels/spmm.py), interpret plane."""
+        a = _banded(128, 7)
+        x = _rhs(128, 4)
+        m = S.matrix(a, format=fmt)
+        with registry.use_backend("interpret"):
+            assert registry.select("spmm", m, C.bind(x)).plane == "interpret"
+            y = S.spmm(m, x).read()
+        np.testing.assert_allclose(y, a @ x, rtol=1e-4, atol=1e-5)
+
+    def test_spmm_rejects_vectors(self):
+        m = S.matrix(_banded(64, 3))
+        with pytest.raises(ValueError, match="2-D RHS"):
+            S.spmm(m, np.ones(64, np.float32))
+
+    def test_empty_bsr(self):
+        bsr = S.bsr_from_dense(np.zeros((64, 64), np.float32))
+        y = S.spmm(bsr, _rhs(64, 4)).read()
+        np.testing.assert_array_equal(y, np.zeros((64, 4), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# the solver seam: 2-D x routes solver_spmv to the spmm plane
+# ---------------------------------------------------------------------------
+
+class TestSolverRouting:
+    def test_2d_x_routes_to_spmm(self):
+        a = _banded()
+        csr = S.matrix(a, format="csr")
+        x2 = C.bind(_rhs(a.shape[0]))
+        assert registry.select("solver_spmv", csr, x2).name == "spmm"
+        y = registry.dispatch("solver_spmv", csr, x2).read()
+        np.testing.assert_allclose(y, a @ x2.read(), rtol=1e-4, atol=1e-5)
+
+    def test_1d_call_sites_untouched(self):
+        a = _banded()
+        x1 = C.bind(_rhs(a.shape[0], 1)[:, 0])
+        assert registry.select("solver_spmv",
+                               S.matrix(a, format="csr"), x1).name == "spmv2"
+        assert registry.select("solver_spmv",
+                               S.matrix(a, format="ell"), x1).name == "ell"
+        assert registry.select("solver_spmv",
+                               S.matrix(a, format="dia"), x1).name == "dia"
+
+    def test_bsr_single_vector_lift(self):
+        """cg_solve works on blocked matrices via the 1-D lift."""
+        a = _banded(128, 7)
+        bsr = S.matrix(a, format="bsr")
+        b = C.bind(_rhs(128, 1)[:, 0])
+        assert registry.select("solver_spmv", bsr, b).name == "spmm"
+        res = solvers.cg_solve(bsr, b, stop=1e-12, max_iters=256)
+        rel = (np.linalg.norm(a @ res.x.read() - b.read())
+               / np.linalg.norm(b.read()))
+        assert rel < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# multi-RHS block-CG on the spmm plane
+# ---------------------------------------------------------------------------
+
+class TestBlockCG:
+    @pytest.mark.parametrize("n,bw", [(128, 3), (256, 31), (512, 63)])
+    def test_converges_on_table2(self, n, bw):
+        """Block-CG to 1e-5 on the paper Table-2 banded systems
+        (acceptance criterion)."""
+        a = banded_spd(n, bw, seed=n + bw).astype(np.float32)
+        b = _rhs(n, 4, seed=n)
+        res = solvers.cg_block_solve(S.matrix(a), b, stop=1e-12,
+                                     max_iters=2 * n)
+        x = res.x.read()
+        rel = (np.linalg.norm(a @ x - b, axis=0)
+               / np.linalg.norm(b, axis=0)).max()
+        assert rel < 1e-5
+        assert x.shape == (n, 4)
+
+    def test_shares_one_krylov_space(self):
+        """k systems in one block solve take no more iterations than the
+        worst single-vector solve (the point of block CG)."""
+        n, bw = 256, 31
+        a = banded_spd(n, bw, seed=7).astype(np.float32)
+        b = _rhs(n, 4, seed=7)
+        blk = solvers.cg_block_solve(S.matrix(a), b, stop=1e-12,
+                                     max_iters=2 * n)
+        singles = [solvers.cg_solve(S.matrix(a, format="dia"),
+                                    C.bind(b[:, j]), stop=1e-12,
+                                    max_iters=2 * n).iterations
+                   for j in range(4)]
+        assert int(blk.iterations) <= max(int(s) for s in singles)
+
+    def test_consumes_the_spmm_plane(self):
+        """variant= pins the SpMM formulation through the whole solve."""
+        n = 128
+        a = banded_spd(n, 7, seed=3).astype(np.float32)
+        b = _rhs(n, 2, seed=3)
+        auto = solvers.cg_block_solve(S.matrix(a), b, max_iters=2 * n)
+        pinned = solvers.cg_block_solve(S.matrix(a, format="csr"), b,
+                                        max_iters=2 * n, variant="csr")
+        np.testing.assert_allclose(auto.x.read(), pinned.x.read(),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_rejects_vector_rhs(self):
+        with pytest.raises(ValueError, match="RHS panel"):
+            solvers.cg_block_solve(S.matrix(_banded(64, 3)),
+                                   np.ones(64, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# mesh scope: mesh_spmm + the block-cyclic 2-D matmul satellite
+# ---------------------------------------------------------------------------
+
+class TestMeshSpmm:
+    @pytest.mark.parametrize("fmt", ["csr", "ell", "dia"])
+    def test_mesh_spmm_matches_chip(self, mesh8, fmt):
+        a = _banded()
+        x = _rhs(a.shape[0])
+        m = S.matrix(a, format=fmt)
+        want = S.spmm(m, x).read()
+        with use_level(ExecLevel.O3, mesh8):
+            assert registry.select("spmm", m, C.bind(x)).name == "mesh_spmm"
+            got = S.spmm(m, x).read()
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_o4_mesh_spmm_matches_chip(self, mesh222):
+        a = _banded()
+        x = _rhs(a.shape[0])
+        m = S.matrix(a)
+        want = S.spmm(m, x).read()
+        with use_level(ExecLevel.O4, mesh222):
+            assert registry.select("spmm", m, C.bind(x)).name == "mesh_spmm"
+            got = S.spmm(m, x).read()
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_bsr_and_indivisible_degrade_to_chip(self, mesh8):
+        x = _rhs(256)
+        bsr = S.matrix(_banded(), format="bsr")
+        odd = S.matrix(_banded(100, 3), format="ell")
+        with use_level(ExecLevel.O3, mesh8):
+            assert registry.select("spmm", bsr, C.bind(x)).scope == "chip"
+            assert registry.select("spmm", odd,
+                                   C.bind(_rhs(100))).scope == "chip"
+
+    def test_mesh_block_cg_matches_chip(self, mesh8):
+        n = 256
+        a = banded_spd(n, 31, seed=5).astype(np.float32)
+        b = _rhs(n, 4, seed=5)
+        m = S.matrix(a)
+        chip = solvers.cg_block_solve(m, b, stop=1e-12, max_iters=2 * n)
+        with use_level(ExecLevel.O3, mesh8):
+            mesh = solvers.cg_block_solve(m, b, stop=1e-12, max_iters=2 * n)
+        np.testing.assert_allclose(mesh.x.read(), chip.x.read(),
+                                   rtol=1e-5, atol=1e-5)
+        assert abs(int(mesh.iterations) - int(chip.iterations)) <= 1
+
+
+class TestBlockCyclic:
+    def test_perm_deals_panels_round_robin(self):
+        from repro.distributed.numerics import block_cyclic_perm
+
+        perm, inv = block_cyclic_perm(512, 2, 128)
+        # shard 0 (first half of permuted columns) owns panels 0 and 2
+        assert sorted(set(perm[:256] // 128)) == [0, 2]
+        assert sorted(set(perm[256:] // 128)) == [1, 3]
+        np.testing.assert_array_equal(perm[inv], np.arange(512))
+
+    def test_perm_degenerates_gracefully(self):
+        from repro.distributed.numerics import block_cyclic_perm
+
+        assert block_cyclic_perm(256, 2, 128) is None   # 1 panel per shard
+        assert block_cyclic_perm(96, 2, 128) is None    # doesn't tile
+        assert block_cyclic_perm(512, 1, 128) is None   # no model axis
+
+    def test_cyclic_2d_matmul_matches_chip(self, mesh222, rng):
+        """N=512 over t=2 model tiles → a real cyclic assignment; the
+        numerics must not change (ROADMAP item closed)."""
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        a = jnp.asarray(rng.standard_normal((64, 128)))
+        b = jnp.asarray(rng.standard_normal((128, 512)))
+        want = np.asarray(ops.matmul(a, b))
+        with use_level(ExecLevel.O4, mesh222):
+            assert registry.select("matmul", a, b).name == "mesh_psum_2d"
+            got = np.asarray(ops.matmul(a, b))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
