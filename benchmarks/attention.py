@@ -1,0 +1,94 @@
+"""Attention suite — chip flash vs sequence-parallel ring over an L sweep.
+
+The paper's headline table re-runs one program under O2/O3 with the core
+count as the only knob; this suite replays that for the hot path every
+model config shares: causal GQA attention.  Each sequence length is timed
+twice —
+
+    chip   use_level(O2): the chip kernel plane (pallas on TPU, the
+           chunked/oracle XLA forms elsewhere)
+    ring   use_level(O3) on a (ring, 1) data mesh: the same dispatch
+           retargets to the sequence-parallel ring variant
+           (repro.distributed.attention, DESIGN.md §10)
+
+— recording tokens/s and the variant the registry actually selected, so
+the ``--json-out`` trajectory shows both rows per L and scaling
+regressions in either stay visible.  On the CPU container the fake host
+devices share one socket, so (exactly as for the scaling sweep) the
+artefact is the per-shape trajectory and selection, not absolute speedups.
+
+    PYTHONPATH=src python -m benchmarks.run --only attention
+    PYTHONPATH=src python -m benchmarks.run --only attention --json-out a.json
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import print_table, time_fn
+
+#: problem shape: batch, q heads, kv heads (GQA 4:2), head dim.
+B, H, HK, D = 2, 4, 2, 64
+
+#: sequence lengths swept (every entry divisible by 2 * ring for the
+#: zig-zag causal layout on an 8-wide ring).
+LS = (512, 1024)
+LS_FULL = (512, 1024, 2048, 4096)
+
+
+def _qkv(L: int):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(L)
+    q = jnp.asarray(rng.standard_normal((B, H, L, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, HK, L, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, HK, L, D)), jnp.float32)
+    return q, k, v
+
+
+def main(full: bool = False) -> list[dict]:
+    import jax
+
+    from repro.core import ExecLevel, compat, registry, use_level
+    from repro.distributed.collectives import ring_plan
+    from repro.kernels import ops
+
+    # largest power-of-two ring the devices allow: 2*ring then divides
+    # every swept L (multiples of 512), so the ring rows really time the
+    # ring variant instead of silently degrading to chip
+    ring = 1 << (min(jax.device_count(), 8).bit_length() - 1)
+    mesh = None
+    if ring > 1:
+        mesh = compat.make_mesh((ring, 1), ("data", "model"),
+                                devices=jax.devices()[:ring])
+        ring = ring_plan(mesh).size
+    else:
+        print("attention suite: 1 device visible — ring rows degrade to "
+              "chip (run under XLA_FLAGS=--xla_force_host_platform_"
+              "device_count=8 for a real ring)")
+
+    modes = [("chip", lambda: use_level(ExecLevel.O2), 1)]
+    if mesh is not None:
+        modes.append(("ring", lambda: use_level(ExecLevel.O3, mesh), ring))
+
+    rows: list[dict] = []
+    for L in (LS_FULL if full else LS):
+        q, k, v = _qkv(L)
+        for mode, ctx, width in modes:
+            with ctx():
+                sel = registry.select("flash_attention", q, k, v,
+                                      causal=True).name
+                t = time_fn(lambda: ops.flash_attention(q, k, v, causal=True),
+                            warmup=1, iters=3)
+            rows.append({
+                "L": L, "mode": mode, "variant": sel, "ring": width,
+                "seconds": round(t, 6),
+                "tokens_per_s": round(B * L / t, 1),
+            })
+    print_table("attention (chip flash vs sequence-parallel ring, causal "
+                f"GQA {H}:{HK} heads, d={D})", rows,
+                ["L", "mode", "variant", "ring", "seconds", "tokens_per_s"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

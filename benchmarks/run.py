@@ -38,7 +38,7 @@ def main(argv=None) -> int:
                     help="the paper's full input sweeps (slower)")
     ap.add_argument("--only", "--suite", default=None,
                     choices=["mod2am", "mod2as", "mod2f", "cg", "spmm",
-                             "roofline"])
+                             "attention", "roofline"])
     ap.add_argument("--backend-sweep", action="store_true",
                     help="benchmark every registered registry variant per op "
                          "and print a per-variant comparison table")
@@ -84,7 +84,11 @@ def main(argv=None) -> int:
                      # sparse operands (DESIGN.md §9)
                      "sparse_formats": sorted({r["sparse_format"]
                                                for r in rows
-                                               if r["sparse_format"] != "-"})}
+                                               if r["sparse_format"] != "-"}),
+                     # the sequence-ring widths the attention problem
+                     # sharded over (DESIGN.md §10)
+                     "ring_widths": sorted({r["ring"] for r in rows
+                                            if r["ring"] != "-"})}
         except Exception as e:
             print(f"[scaling_sweep] FAILED: {type(e).__name__}: {e}")
             entry = {"status": "error", "error": f"{type(e).__name__}: {e}"}
@@ -118,7 +122,8 @@ def main(argv=None) -> int:
         print("\nbackend sweep complete")
         return 1 if entry["status"] == "error" else 0
 
-    from benchmarks import mod2am, mod2as, mod2f, cg, spmm, roofline_table
+    from benchmarks import (mod2am, mod2as, mod2f, cg, spmm, attention,
+                            roofline_table)
 
     suites = {
         "mod2am": lambda: mod2am.main(args.full),
@@ -126,6 +131,7 @@ def main(argv=None) -> int:
         "mod2f": lambda: mod2f.main(args.full),
         "cg": lambda: cg.main(args.full),
         "spmm": lambda: spmm.main(args.full),
+        "attention": lambda: attention.main(args.full),
         "roofline": lambda: _roofline(roofline_table),
     }
     if args.only:

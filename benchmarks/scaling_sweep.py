@@ -98,6 +98,18 @@ def _problems():
         lambda: registry.select("spmm", sp_m, sp_x).name,
         S.format_of(sp_m))
 
+    # causal GQA attention: L = 256 splits into 2*ring half-blocks on every
+    # swept shape (ring = 8 / 4 / 4), so the sequence-parallel ring variant
+    # (DESIGN.md §10) selects wherever a mesh is ambient
+    qa = jnp.asarray(rng.standard_normal((2, 4, 256, 64)), jnp.float32)
+    ka = jnp.asarray(rng.standard_normal((2, 2, 256, 64)), jnp.float32)
+    va = jnp.asarray(rng.standard_normal((2, 2, 256, 64)), jnp.float32)
+    problems["attention"] = (
+        lambda: ops.flash_attention(qa, ka, va, causal=True),
+        lambda: registry.select("flash_attention", qa, ka, va,
+                                causal=True).name,
+        "-")
+
     return problems
 
 
@@ -109,6 +121,12 @@ def _roles_label(mesh) -> str:
         return "-"
     # ';' separator: the table prints as CSV, so the field must stay atomic
     return ";".join(f"{n}={r}" for n, r in zip(topo.axis_names, topo.roles))
+
+
+def _ring_label(mesh) -> int:
+    from repro.distributed.collectives import ring_plan
+
+    return ring_plan(mesh).size if mesh is not None else 1
 
 
 def main(mesh_shapes: Iterable = MESH_SHAPES,
@@ -146,19 +164,23 @@ def main(mesh_shapes: Iterable = MESH_SHAPES,
             level = ExecLevel.O4 if "pod" in axes else ExecLevel.O3
             ctx = use_level(level, mesh)
         with ctx:
+            ring = _ring_label(mesh)
             for kernel, (fn, selected, fmt) in problems.items():
                 t = time_fn(lambda: fn(), warmup=1, iters=3)
                 base.setdefault(kernel, t)
                 rows.append({
                     "kernel": kernel, "devices": devices, "mesh": label,
                     "roles": _roles_label(mesh), "sparse_format": fmt,
+                    # the sequence-ring width the attention problem shards
+                    # over on this shape ('-' for the non-attention kernels)
+                    "ring": ring if kernel == "attention" else "-",
                     "variant": selected(), "seconds": round(t, 6),
                     "speedup": round(base[kernel] / t, 3),
                 })
     print_table("scaling sweep (speedup vs mesh shape; paper's "
                 "ARBB_NUM_CORES tables, O2 -> O3 -> O4 meshes)", rows,
                 ["kernel", "devices", "mesh", "roles", "variant",
-                 "sparse_format", "seconds", "speedup"])
+                 "sparse_format", "ring", "seconds", "speedup"])
     return rows
 
 

@@ -83,7 +83,8 @@ _PROVIDERS = {
     "spmv_ell": ("repro.kernels.ops",),
     "spmv_dia": ("repro.kernels.ops",),
     "fft": ("repro.kernels.ops", "repro.distributed.numerics"),
-    "flash_attention": ("repro.kernels.ops",),
+    "flash_attention": ("repro.kernels.ops", "repro.distributed.attention"),
+    "flash_attention_state": ("repro.kernels.ops",),
     "solver_spmv": ("repro.numerics.spmv", "repro.distributed.numerics",
                     "repro.sparse.spmm"),
     "spmm": ("repro.sparse.spmm", "repro.distributed.numerics"),

@@ -1,9 +1,11 @@
 """repro.distributed — sharding rules, the hierarchical collectives plane
-(axis-role reduction plans, DESIGN.md §8), and the mesh-scoped numerics.
+(axis-role reduction/ring plans, DESIGN.md §8/§10), and the mesh-scoped
+numerics.
 
-``repro.distributed.numerics`` (DESIGN.md §7) is deliberately NOT imported
-here: it registers the mesh-scoped variants of the paper kernels as a side
-effect, and the registry lazy-loads it per op (``registry._PROVIDERS``) so
-importing this package stays light.  ``collectives`` is pure (no
+``repro.distributed.numerics`` (DESIGN.md §7) and ``repro.distributed.
+attention`` (the sequence-parallel ring variant, §10) are deliberately NOT
+imported here: they register mesh-scoped registry variants as a side
+effect, and the registry lazy-loads them per op (``registry._PROVIDERS``)
+so importing this package stays light.  ``collectives`` is pure (no
 registration side effects) and is imported eagerly."""
 from repro.distributed import collectives, sharding  # noqa: F401

@@ -28,6 +28,13 @@ Plans are frozen/hashable, so shard_map executables cache per plan
 (``lru_cache``) exactly as the PR 2 kernels cached per mesh.  On an O3 mesh
 with no pod axis every schedule degenerates to the flat single-axis form —
 the plan layer costs nothing when the hierarchy is trivial.
+
+The sequence-parallel plane (DESIGN.md §10) adds the *ring* schedule:
+:func:`ring_plan` emits a :class:`RingPlan` over the same batch-role axes —
+a flat ring on O3, a **pod-major** ring on O4 (consecutive hops stay on fast
+intra-pod ICI; only one hop per revolution crosses each pod boundary) —
+whose one collective is the ``ppermute`` neighbour rotation ring attention
+streams K/V panels around.
 """
 from __future__ import annotations
 
@@ -40,7 +47,8 @@ import jax.numpy as jnp
 from repro.core import registry
 from repro.core.topology import MeshTopology, topology_of
 
-__all__ = ["ReducePlan", "reduce_plan", "ambient_plan", "flat_index"]
+__all__ = ["ReducePlan", "reduce_plan", "ambient_plan", "flat_index",
+           "RingPlan", "ring_plan", "ambient_ring_plan"]
 
 
 def _entry(axes: tuple[str, ...]):
@@ -189,3 +197,86 @@ def ambient_plan() -> Optional[ReducePlan]:
         return None
     plan = reduce_plan(ctx.mesh, ctx.topology)
     return plan if plan.batch_axes else None
+
+
+# ---------------------------------------------------------------------------
+# ring schedules (the sequence-parallel plane, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RingPlan:
+    """A neighbour-rotation schedule over a mesh's batch-role axes — the
+    collective shape of sequence-parallel (ring) attention.
+
+    ``axes`` are in mesh (outer-first, pod-major) order, so on an O4
+    ``(pod, data, model)`` mesh the ring walks all data shards of pod 0,
+    then pod 1, ...: ``size - n_pods`` of the hops are fast intra-pod ICI
+    neighbour exchanges and only the pod-seam hops cross the DCN.  On an O3
+    mesh the ring is flat over ``data``.  Frozen/hashable so shard_map
+    executables cache per plan, exactly like :class:`ReducePlan`.
+    """
+    mesh: object                     # jax.sharding.Mesh (hashable)
+    topo: MeshTopology
+    axes: tuple[str, ...]            # pod-major ring axes
+
+    @property
+    def size(self) -> int:
+        """Ring participants = product of the ring-axis sizes."""
+        w = 1
+        for a in self.axes:
+            w *= self.topo.size(a)
+        return w
+
+    def spec_entry(self):
+        """The PartitionSpec entry sharding the sequence dim over the ring
+        (None / name / tuple, as P() expects)."""
+        return _entry(self.axes)
+
+    @property
+    def perm(self) -> tuple[tuple[int, int], ...]:
+        """One rotation hop: shard ``i`` sends its K/V panel to ``i + 1``
+        (mod size), so after ``h`` hops shard ``r`` holds the panel that
+        started on shard ``(r - h) mod size``."""
+        w = self.size
+        return tuple((i, (i + 1) % w) for i in range(w))
+
+    def schedule(self) -> tuple[tuple[str, tuple[str, ...]], ...]:
+        """The emitted schedule as (collective, axes) steps — one
+        ``ppermute`` rotation per non-self hop — for introspection/tests."""
+        return (("ppermute", self.axes),) * (self.size - 1)
+
+    # -- execution (call these inside shard_map) ----------------------------
+
+    def shift(self, x):
+        """Rotate ``x`` one hop around the ring (pod-major flat order)."""
+        axis = self.axes if len(self.axes) > 1 else self.axes[0]
+        return jax.lax.ppermute(x, axis, self.perm)
+
+    def ring_index(self):
+        """This device's flat ring position (pod-major), inside shard_map."""
+        sizes = tuple(self.topo.size(a) for a in self.axes)
+        return flat_index(self.axes, sizes)
+
+
+def ring_plan(mesh, topo: Optional[MeshTopology] = None) -> RingPlan:
+    """Build the :class:`RingPlan` for ``mesh`` from its axis roles.
+
+    The ring runs over the batch-role (pod × data) axes — the same
+    participants :func:`reduce_plan` reduces over — with degenerate (size-1)
+    axes dropped; model axes replicate (a head-parallel dimension never
+    joins the sequence ring)."""
+    topo = topo if topo is not None else topology_of(mesh)
+    if topo is None:
+        raise ValueError("ring_plan needs a mesh (got None)")
+    axes = tuple(a for a in topo.axes("pod", "data") if topo.size(a) > 1)
+    return RingPlan(mesh=mesh, topo=topo, axes=axes)
+
+
+def ambient_ring_plan() -> Optional[RingPlan]:
+    """The ring plan for the ambient O3/O4 mesh, or None outside one (or
+    when the mesh has no batch-role axis to ring over)."""
+    ctx = registry.select_context()
+    if ctx.scope != "mesh" or ctx.topology is None:
+        return None
+    plan = ring_plan(ctx.mesh, ctx.topology)
+    return plan if plan.axes else None

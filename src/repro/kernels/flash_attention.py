@@ -18,6 +18,13 @@ to kv-head h // (q_heads // kv_heads), so MQA (gemma-2b kv=1) and GQA
 Causal masking is positional (iota compare) inside the kernel; fully-masked
 panels are skipped via ``pl.when`` on the grid coordinates, halving work for
 causal training shapes.
+
+``return_state=True`` additionally emits the final online-softmax state —
+the row maxima ``m`` and denominators ``l``, both (batch, q_heads, seq_q)
+f32 — which is what the sequence-parallel ring variant (DESIGN.md §10)
+needs to merge per-hop partial attention across K/V rotations: the
+unnormalised accumulator is recovered as ``o * l`` and two states combine
+exactly like two K panels inside this kernel.
 """
 from __future__ import annotations
 
@@ -30,15 +37,23 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import compat
 
-__all__ = ["flash_attention_kernel", "flash_attention"]
+__all__ = ["flash_attention_kernel", "flash_attention_state_kernel",
+           "flash_attention", "NEG_INF"]
 
+#: The additive mask value (finite, so exp() underflows to 0 instead of
+#: producing inf - inf = nan) — shared by every attention formulation:
+#: this kernel, the XLA oracles (kernels/ref.py), and the KV-cache decode
+#: path (models/attention.py) all import it rather than inlining -1e30.
 NEG_INF = -1e30
 
 
-def flash_attention_kernel(
-    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-    *, scale: float, causal: bool, kv_steps: int, block_q: int, block_k: int,
+def _fa_step(
+    q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, block_q: int, block_k: int,
 ):
+    """One grid step of the online-softmax recurrence: init the (m, l, acc)
+    scratch on the first K panel, then fold this panel in (shared by the
+    plain and the state-returning kernels)."""
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -73,10 +88,34 @@ def flash_attention_kernel(
             p.astype(v.dtype), v, preferred_element_type=jnp.float32)
         m_ref[...] = m_cur
 
-    @pl.when(ik == kv_steps - 1)
+
+def flash_attention_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, kv_steps: int, block_q: int, block_k: int,
+):
+    _fa_step(q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, scale=scale,
+             causal=causal, block_q=block_q, block_k=block_k)
+
+    @pl.when(pl.program_id(3) == kv_steps - 1)
     def _flush():
         denom = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_state_kernel(
+    q_ref, k_ref, v_ref, o_ref, ms_ref, ls_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, kv_steps: int, block_q: int, block_k: int,
+):
+    """Same recurrence; the flush also emits the final (m, l) state."""
+    _fa_step(q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, scale=scale,
+             causal=causal, block_q=block_q, block_k=block_k)
+
+    @pl.when(pl.program_id(3) == kv_steps - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+        ms_ref[0, 0] = m_ref[...]
+        ls_ref[0, 0] = l_ref[...]
 
 
 def flash_attention(
@@ -88,8 +127,12 @@ def flash_attention(
     scale: float | None = None,
     block_q: int = 128,
     block_k: int = 128,
+    return_state: bool = False,
     interpret: bool = False,
-) -> jax.Array:
+):
+    """Flash attention; with ``return_state`` returns ``(o, m, l)`` where
+    ``o`` is the normalised output and ``m`` / ``l`` the per-row softmax
+    max / denominator (batch, q_heads, seq_q) f32."""
     batch, q_heads, seq_q, d = q.shape
     _, kv_heads, seq_k, _ = k.shape
     assert q_heads % kv_heads == 0
@@ -101,22 +144,34 @@ def flash_attention(
     grid = (batch, q_heads, seq_q // block_q, seq_k // block_k)
 
     kernel = functools.partial(
-        flash_attention_kernel, scale=scale, causal=causal,
+        flash_attention_state_kernel if return_state
+        else flash_attention_kernel,
+        scale=scale, causal=causal,
         kv_steps=grid[3], block_q=block_q, block_k=block_k)
+
+    o_spec = pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0))
+    out_shape = jax.ShapeDtypeStruct(q.shape, q.dtype)
+    out_specs = o_spec
+    if return_state:
+        state_spec = pl.BlockSpec((1, 1, block_q),
+                                  lambda b, h, iq, ik: (b, h, iq))
+        state_shape = jax.ShapeDtypeStruct((batch, q_heads, seq_q),
+                                           jnp.float32)
+        out_shape = (out_shape, state_shape, state_shape)
+        out_specs = (o_spec, state_spec, state_spec)
 
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+            o_spec,
             pl.BlockSpec((1, 1, block_k, d),
                          lambda b, h, iq, ik: (b, h // group, ik, 0)),
             pl.BlockSpec((1, 1, block_k, d),
                          lambda b, h, iq, ik: (b, h // group, ik, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, d),
-                               lambda b, h, iq, ik: (b, h, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q,), jnp.float32),

@@ -38,7 +38,7 @@ from repro.kernels import spmv as spmv_k
 from repro.numerics.fft import bitrev_permutation, split_stream_twiddles
 
 __all__ = ["backend", "current_backend", "matmul", "spmv_ell", "spmv_dia",
-           "fft", "flash_attention"]
+           "fft", "flash_attention", "flash_attention_state"]
 
 
 # ---------------------------------------------------------------------------
@@ -313,4 +313,67 @@ def _attn_xla_chunked(q, k, v, *, causal=True, block_q=None, block_k=None):
 
 def flash_attention(q, k, v, *, causal=True, block_q=None, block_k=None):
     return registry.dispatch("flash_attention", q, k, v, causal=causal,
+                             block_q=block_q, block_k=block_k)
+
+
+# ---------------------------------------------------------------------------
+# flash attention with state: (o, m, l) — the per-hop contract of the
+# sequence-parallel ring variant (repro.distributed.attention, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _fit_block(n: int, target: int) -> int:
+    """The largest block <= target that divides n (the per-shard sequence
+    slices the ring variant dispatches are arbitrary divisors of L, so the
+    kernel's divisibility contract is met by shrinking the block)."""
+    b = min(target, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def _fa_state_impl(q, k, v, causal, block_q, block_k, interpret):
+    return fa_k.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                                block_k=block_k, return_state=True,
+                                interpret=interpret)
+
+
+def _fa_state_kernel_variant(interpret):
+    def impl(q, k, v, *, causal=True, block_q=None, block_k=None):
+        bq = _fit_block(q.shape[2], block_q or _FA_DEFAULTS["q"])
+        bk = _fit_block(k.shape[2], block_k or _FA_DEFAULTS["k"])
+        return _fa_state_impl(q, k, v, causal, bq, bk, interpret)
+    return impl
+
+
+def _fa_state_accepts(q, k, v, *, causal=True, block_q=None, block_k=None):
+    return q.shape[1] % k.shape[1] == 0
+
+
+registry.register("flash_attention_state", "pallas",
+                  _fa_state_kernel_variant(False), plane="pallas", cost=1.0,
+                  accepts=_fa_state_accepts,
+                  doc="GQA flash kernel emitting the (m, l) softmax state")
+registry.register("flash_attention_state", "interpret",
+                  _fa_state_kernel_variant(True), plane="interpret",
+                  cost=100.0, accepts=_fa_state_accepts)
+
+
+_attn_state_ref_jit = jax.jit(ref.attention_state_ref,
+                              static_argnames=("causal",))
+
+
+@registry.register("flash_attention_state", "xla", plane="xla", cost=2.0,
+                   accepts=_fa_state_accepts,
+                   doc="materialising oracle returning (o, m, l)")
+def _attn_state_xla(q, k, v, *, causal=True, block_q=None, block_k=None):
+    return _attn_state_ref_jit(q, k, v, causal=causal)
+
+
+def flash_attention_state(q, k, v, *, causal=True, block_q=None,
+                          block_k=None):
+    """Attention that also returns the online-softmax (m, l) row state —
+    what the ring variant merges across K/V rotations."""
+    return registry.dispatch("flash_attention_state", q, k, v, causal=causal,
                              block_q=block_q, block_k=block_k)

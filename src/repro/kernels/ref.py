@@ -8,9 +8,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.flash_attention import NEG_INF
+
 __all__ = ["matmul_ref", "spmv_ell_ref", "spmv_dia_ref", "spmm_ell_ref",
            "spmm_bsr_ref", "fft_stage_ref", "fft_ref", "attention_ref",
-           "attention_chunked"]
+           "attention_state_ref", "attention_chunked"]
 
 
 def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
@@ -75,20 +77,32 @@ def fft_ref(x: jax.Array) -> jax.Array:
 
 def attention_ref(q, k, v, *, causal: bool = True, scale=None) -> jax.Array:
     """(b, hq, lq, d) x (b, hk, lk, d) GQA attention, f32 softmax."""
+    return attention_state_ref(q, k, v, causal=causal, scale=scale)[0]
+
+
+def attention_state_ref(q, k, v, *, causal: bool = True, scale=None
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """:func:`attention_ref` that also returns the online-softmax state —
+    ``(o, m, l)`` with row maxima ``m`` and denominators ``l`` both
+    (b, hq, lq) f32 — the per-hop contract of the sequence-parallel ring
+    variant (mirrors the flash kernel's ``return_state=True``)."""
     b, hq, lq, d = q.shape
     _, hk, lk, _ = k.shape
     group = hq // hk
-    kk = jnp.repeat(k, group, axis=1)
-    vv = jnp.repeat(v, group, axis=1)
+    kk = jnp.repeat(k, group, axis=1) if group > 1 else k
+    vv = jnp.repeat(v, group, axis=1) if group > 1 else v
     scale = scale if scale is not None else d ** -0.5
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                    kk.astype(jnp.float32)) * scale
     if causal:
         mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)
-        s = jnp.where(mask, s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
+        s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
-    return out.astype(q.dtype)
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype), m, l
 
 
 def attention_chunked(q, k, v, *, causal: bool = True, scale=None,
@@ -123,7 +137,7 @@ def attention_chunked(q, k, v, *, causal: bool = True, scale=None,
         s = jnp.einsum("bhqd,bhkd->bhqk", q32, kblk.astype(jnp.float32))
         if causal:
             kj = j0 + jnp.arange(block_kv)[None, :]
-            s = jnp.where(qi >= kj, s, -1e30)
+            s = jnp.where(qi >= kj, s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)

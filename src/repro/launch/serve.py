@@ -2,10 +2,17 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
         --scale 0.08 --batch 4 --prompt-len 32 --new-tokens 16
+
+``--opt-level O3`` (or the ``ARBB_OPT_LEVEL`` env var) builds the engine
+under an ambient mesh: the prefill path then shards long prompts over the
+sequence-parallel ring (DESIGN.md §10) while the decode loop stays
+chip-local — the engine pins the level at construction, exactly as it pins
+the kernel plane.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import sys
 import time
 
@@ -14,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config
+from repro.core import ExecLevel, use_level
 from repro.launch.train import reduce_config
 from repro.models.lm import LM
 from repro.serve import Engine, SamplingParams
@@ -30,6 +38,10 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--opt-level", default=None, choices=["O2", "O3", "O4"],
+                    help="execution level for the engine: O3/O4 shard the "
+                         "prefill sequence over the ring (default: the "
+                         "ambient level / ARBB_OPT_LEVEL)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -49,7 +61,16 @@ def main(argv=None) -> int:
     sp = SamplingParams(greedy=args.temperature == 0.0,
                         temperature=max(args.temperature, 1e-6))
     max_len = args.max_len or (args.prompt_len + args.new_tokens + 8)
-    engine = Engine(lm, params, max_len=max_len, sampling=sp)
+    level_ctx = (use_level(ExecLevel[args.opt_level]) if args.opt_level
+                 else contextlib.nullcontext())
+    with level_ctx:
+        # the engine pins the ambient level/mesh: O3/O4 prefill rides the
+        # sequence-parallel ring on every generate() (DESIGN.md §10)
+        engine = Engine(lm, params, max_len=max_len, sampling=sp)
+    if engine.active_level.mesh is not None:
+        from repro.launch.mesh import describe
+        print(f"engine level {engine.active_level.level.name} on "
+              f"{describe(engine.active_level.mesh)}")
 
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,

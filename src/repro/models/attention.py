@@ -6,6 +6,18 @@ qwen2-vl (64/8), musicgen (24/24), qwen3-moe (32/4), arctic (56/8).
 
 qk_norm (qwen3): RMS-normalise q and k per head before RoPE.
 M-RoPE (qwen2-vl): 3-stream rotary, sections split head_dim/2.
+
+The full-sequence path no longer assumes a replicated sequence: the
+``flash_attention`` dispatch reads the ambient mesh off ``SelectContext``,
+so under ``use_level(O3/O4)`` the sequence-parallel ring variant
+(``repro.distributed.attention``, DESIGN.md §10) selects automatically —
+training steps and serve prefill shard L over the pod × data ring with no
+call-site change, and degrade back to the chip kernel without a mesh.
+Decode stays chip-local: one query token against the device-resident KV
+cache never benefits from a sequence ring.
+
+``NEG_INF`` (the additive mask value) is imported from the flash kernel —
+one constant owns every attention mask, kernel and decode path alike.
 """
 from __future__ import annotations
 
@@ -15,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.registry import dispatch
+from repro.kernels.flash_attention import NEG_INF
 from repro.models.layers import (apply_rope, dense_init, linear, rms_norm,
                                  rms_norm_init, rope)
 
@@ -74,7 +87,8 @@ def attention_apply_kv(x: jax.Array, p: Params, cfg, cos, sin
     q, k, v = _project_qkv(x, p, cfg)
     q, k = _rope_qk(q, k, cos, sin, cfg)
     v = v.transpose(0, 2, 1, 3)
-    # registry-dispatched: flash kernel on TPU, chunked/oracle XLA elsewhere
+    # registry-dispatched: ring over the ambient mesh at O3/O4, flash
+    # kernel on one TPU chip, chunked/oracle XLA elsewhere
     out = dispatch("flash_attention", q, k, v, causal=True)  # (B, H, L, D)
     out = out.transpose(0, 2, 1, 3).reshape(B, L, cfg.num_heads * cfg.head_dim)
     return linear(out, p["wo"].astype(x.dtype)), k, v
@@ -107,7 +121,7 @@ def attention_decode(
     s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
                    cache_k.astype(jnp.float32)) * (hd ** -0.5)
     mask = jnp.arange(S) <= cur_len                       # include current token
-    s = jnp.where(mask[None, None, None, :], s, -1e30)
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bksd->bkgd", w, cache_v.astype(jnp.float32))
     o = o.reshape(B, 1, h * hd).astype(x.dtype)

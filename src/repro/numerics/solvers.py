@@ -149,7 +149,8 @@ class BlockCGResult:
 
 
 def cg_block_solve(a, b, *, stop: float = 1e-10, max_iters: int = 1000,
-                   variant: Optional[str] = None) -> BlockCGResult:
+                   variant: Optional[str] = None,
+                   rank_tol: float = 1e-7) -> BlockCGResult:
     """Multi-RHS conjugate gradients (block CG, O'Leary 1980) on the SpMM
     plane — the §3.4 listing widened to a (n, k) right-hand-side panel.
 
@@ -164,10 +165,24 @@ def cg_block_solve(a, b, *, stop: float = 1e-10, max_iters: int = 1000,
 
     The SpMM is a registry dispatch: under an ambient O3/O4 mesh it runs
     row-sharded (``mesh_spmm``); ``variant=`` pins a formulation.  Stops
-    when every RHS column's squared residual is below ``stop``.  Classic
-    block-CG caveat: the k×k solves assume the residual block keeps full
-    rank (true until well past engineering tolerances for SPD systems;
-    deflation is a ROADMAP follow-up).
+    when every RHS column's squared residual is below ``stop``.
+
+    **Deflation** (closes the ROADMAP item): the classic block-CG failure
+    mode is the residual block losing rank mid-solve — a column converges
+    (its residual row/column of the Gram matrices goes to ~0) or columns
+    become linearly dependent (duplicate/near-duplicate right-hand sides),
+    and the plain ``linalg.solve`` of a singular k×k Gram matrix poisons
+    *every* column.  Both Gram solves therefore run **rank-revealing**:
+    well-converged columns (residual² ≤ ``stop``/100 — a hysteresis margin,
+    so columns still flirting with the stop threshold keep contributing
+    their shared Krylov directions instead of freezing their neighbours)
+    are masked out of the system (identity-padded, so their γ/δ columns
+    vanish and their x/r freeze), and the masked Gram factor is
+    eigen-decomposed with eigenvalues below ``rank_tol``·λmax
+    pseudo-inverted to zero — dependent search directions drop out of the
+    shared Krylov space instead of stalling it.  On a well-conditioned
+    full-rank panel both solves agree with the plain factorisation to
+    floating-point precision.
     """
     bm = unwrap(wrap(b))
     if bm.ndim != 2:
@@ -177,6 +192,22 @@ def cg_block_solve(a, b, *, stop: float = 1e-10, max_iters: int = 1000,
     def aspmm(p):
         return unwrap(registry.dispatch("spmm", a, wrap(p), variant=variant))
 
+    def rr_solve(g, rhs, active):
+        """Rank-revealing solve of ``g @ out = rhs`` on the active columns.
+
+        Inactive (converged) rows/columns are identity-padded and masked
+        out of ``rhs``; the symmetrised remainder is eigen-factored and
+        eigenvalues ≤ rank_tol·λmax invert to 0 (rank-deficient directions
+        contribute nothing)."""
+        am = active.astype(g.dtype)
+        gm = g * (am[:, None] * am[None, :]) + jnp.diag(1.0 - am)
+        gm = 0.5 * (gm + gm.T)              # PᵀAP / RᵀR: symmetric up to fp
+        w, vec = jnp.linalg.eigh(gm)
+        wmax = jnp.max(jnp.abs(w))
+        inv = jnp.where(jnp.abs(w) > rank_tol * wmax, 1.0 / w, 0.0)
+        rhs_m = rhs * (am[:, None] * am[None, :])
+        return vec @ (inv[:, None] * (vec.T @ rhs_m))
+
     def cond(state):
         x, r, p, rtr, k = state
         return jnp.logical_and(jnp.max(jnp.diagonal(rtr)) > stop,
@@ -184,12 +215,14 @@ def cg_block_solve(a, b, *, stop: float = 1e-10, max_iters: int = 1000,
 
     def body(state):
         x, r, p, rtr, k = state
+        # hysteresis: deflate only columns *well* below the stop threshold
+        active = jnp.diagonal(rtr) > 0.01 * stop       # live RHS columns
         s = aspmm(p)                                   # S = A @ P   (n, k)
-        gamma = jnp.linalg.solve(p.T @ s, rtr)         # k×k
+        gamma = rr_solve(p.T @ s, rtr, active)         # k×k
         x_new = x + p @ gamma
         r_new = r - s @ gamma
         rtr_new = r_new.T @ r_new
-        delta = jnp.linalg.solve(rtr, rtr_new)
+        delta = rr_solve(rtr, rtr_new, active)
         p_new = r_new + p @ delta
         return (x_new, r_new, p_new, rtr_new, k + 1)
 

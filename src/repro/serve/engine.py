@@ -18,7 +18,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import registry
+from repro.core import execlevel, registry
 from repro.models.lm import LM
 
 Params = dict[str, Any]
@@ -58,6 +58,13 @@ class Engine:
         # trace lazily on first call, and an ambient plane flip mid-service
         # must not retrace (or worse, split) the compiled decode loop.
         self.active_backend = registry.resolve_backend()
+        # Pin the execution level/mesh the same way: a long-prompt prefill
+        # constructed under use_level(O3/O4) shards the sequence over the
+        # ring (flash_attention/'ring', DESIGN.md §10) on every call, not
+        # just while the constructor's context happens to be open.  Decode
+        # runs *outside* it — one token against a resident KV cache is
+        # chip-local by construction, and must never retarget mid-stream.
+        self.active_level = execlevel.current()
 
         self._prefill = jax.jit(
             functools.partial(lm.prefill, max_len=max_len))
@@ -91,7 +98,10 @@ class Engine:
     def _generate(self, tokens, *, max_new_tokens, eos_id, seed,
                   frontend_embeds):
         B = tokens.shape[0]
-        logits, cache = self._prefill(self.params, tokens, frontend_embeds)
+        lvl = self.active_level
+        with execlevel.use_level(lvl.level, lvl.mesh):
+            logits, cache = self._prefill(self.params, tokens,
+                                          frontend_embeds)
         key = jax.random.PRNGKey(seed)
         key, sub = jax.random.split(key)
         nxt = sample_token(sub, logits, self.sampling)

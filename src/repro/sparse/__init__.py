@@ -14,7 +14,8 @@ O3/O4 mesh the same two lines run row-sharded on the collectives plane.
 """
 from repro.sparse.formats import (BSR, CSR, DIA, ELL, bsr_from_csr,
                                   bsr_from_dense, csr_from_bsr)
-from repro.sparse.selector import FORMATS, format_of, matrix, select_format
+from repro.sparse.selector import (FORMATS, autotune_block, format_of,
+                                   matrix, select_format)
 from repro.sparse.spmm import spmm
 from repro.sparse.stats import SparseStats, sparse_stats
 
@@ -22,6 +23,6 @@ __all__ = [
     "BSR", "CSR", "DIA", "ELL",
     "bsr_from_dense", "bsr_from_csr", "csr_from_bsr",
     "SparseStats", "sparse_stats",
-    "FORMATS", "select_format", "matrix", "format_of",
+    "FORMATS", "select_format", "autotune_block", "matrix", "format_of",
     "spmm",
 ]

@@ -19,19 +19,32 @@ from hardware to matrix structure:
 
 An explicit ``format=`` overrides the rules exactly like an explicit
 ``variant=`` overrides registry dispatch (selection rule 1, DESIGN.md §6).
+
+**Autotuned BSR block size** (closes the ROADMAP item): when ``block`` is
+not pinned, :func:`autotune_block` probes ``block_fill`` at the
+:data:`BLOCK_CANDIDATES` edges (8/16/32) and picks the *largest* candidate
+that keeps the occupied tiles ≥ half full — bigger tiles amortise more MXU
+work per block pointer, so a matrix clustered at 16×16 granularity gets
+16×16 storage instead of fragmenting into 8×8.  The winner is keyed into
+the block-size autotune cache (``op=bsr_block``, the same
+``results/autotune.json`` the kernels tune into — DESIGN.md §5) when
+``REPRO_AUTOTUNE`` is on, so later constructions of same-shaped data skip
+the probe.  An explicit ``block=`` still pins, exactly like ``format=``.
 """
 from __future__ import annotations
 
-from typing import Union
+from typing import Optional, Union
 
 import numpy as np
 
+from repro.core import blocking
 from repro.numerics.sparse import CSR, DIA, ELL, csr_from_dense, \
     dia_from_dense, ell_from_csr
 from repro.sparse.formats import BSR, bsr_from_dense
 from repro.sparse.stats import DEFAULT_BLOCK, SparseStats, sparse_stats
 
-__all__ = ["FORMATS", "select_format", "matrix", "format_of"]
+__all__ = ["FORMATS", "BLOCK_CANDIDATES", "select_format", "autotune_block",
+           "matrix", "format_of"]
 
 #: Auto-selectable formats, strongest-kernel-first (the selector's ranking).
 FORMATS = ("dia", "bsr", "ell", "csr")
@@ -41,6 +54,9 @@ MIN_FILL = 0.5
 
 #: DIA unrolls one shifted FMA per diagonal at trace time; cap the program.
 MAX_DIAGS = 512
+
+#: BSR block edges probed when ``block`` isn't pinned (MXU-tile ladder).
+BLOCK_CANDIDATES = (8, 16, 32)
 
 Matrix = Union[CSR, ELL, DIA, BSR]
 
@@ -59,22 +75,74 @@ def select_format(stats: SparseStats) -> str:
     return "csr"
 
 
-def matrix(a: np.ndarray, format: str = "auto", block: int = DEFAULT_BLOCK,
-           dtype=None) -> Matrix:
+def autotune_block(a: np.ndarray, stats: Optional[SparseStats] = None
+                   ) -> tuple[int, SparseStats]:
+    """Probe ``block_fill`` at :data:`BLOCK_CANDIDATES` and return the
+    winning BSR block edge with its statistics.
+
+    Winner: the largest candidate that tiles the shape and keeps
+    ``block_fill`` ≥ :data:`MIN_FILL`; when none clears the bar, the
+    best-fill candidate (the selector will then usually route past BSR
+    anyway).  A cache hit (``op=bsr_block`` keyed on shape/nnz/bandwidth/
+    dtype) skips the probe; the winner persists only under
+    ``REPRO_AUTOTUNE=1`` — probing is cheap host-side statistics,
+    persistence is the sticky ArBB-style "optimise for the target detected
+    at runtime".  ``stats`` supplies an already-measured
+    :data:`DEFAULT_BLOCK` measurement so callers never re-scan the
+    matrix."""
+    a = np.asarray(a)
+    n, m = a.shape
+    base = stats if stats is not None and stats.block == DEFAULT_BLOCK \
+        else sparse_stats(a, block=DEFAULT_BLOCK)
+    cache = blocking.get_cache()
+    key = blocking.AutotuneCache.key(
+        "bsr_block",
+        {"m": n, "n": m, "nnz": base.nnz, "bw": base.bandwidth},
+        str(a.dtype))
+    hit = cache.lookup(key)
+    if hit is not None and "block" in hit:
+        b = int(hit["block"])
+        return b, (base if b == base.block else sparse_stats(a, block=b))
+    probed = {b: (base if b == base.block else sparse_stats(a, block=b))
+              for b in BLOCK_CANDIDATES if n % b == 0 and m % b == 0}
+    if not probed:
+        return DEFAULT_BLOCK, base
+    full = [b for b, s in probed.items() if s.block_fill >= MIN_FILL]
+    best = max(full) if full else max(probed,
+                                      key=lambda b: probed[b].block_fill)
+    if blocking.autotune_enabled():
+        cache.put(key, {"block": best})
+    return best, probed[best]
+
+
+def matrix(a: np.ndarray, format: str = "auto",
+           block: Optional[int] = None, dtype=None) -> Matrix:
     """Build the sparse container for ``a``, auto-selected from its
     statistics (``format="auto"``) or pinned (``format="dia"|...``).
 
-    The returned container carries the measured :class:`SparseStats` as an
-    advisory ``.stats`` attribute (outside the pytree)."""
+    ``block`` pins the BSR block edge; None probes the
+    :data:`BLOCK_CANDIDATES` ladder (:func:`autotune_block`).  The returned
+    container carries the measured :class:`SparseStats` as an advisory
+    ``.stats`` attribute (outside the pytree)."""
     a = np.asarray(a)
     if dtype is not None:
         a = a.astype(dtype)
-    stats = sparse_stats(a, block=block)
+    if block is not None:
+        stats = sparse_stats(a, block=block)
+    else:
+        stats = sparse_stats(a)
+        # probe the block ladder only when BSR is actually in play —
+        # block_fill is monotone non-increasing in the block edge (bigger
+        # tiles only add padding), so a matrix the 8-edge statistics route
+        # past BSR can never qualify at 16/32 either
+        if format == "bsr" or (format == "auto"
+                               and select_format(stats) == "bsr"):
+            _, stats = autotune_block(a, stats)
     fmt = select_format(stats) if format == "auto" else format
     if fmt == "dia":
         out: Matrix = dia_from_dense(a)
     elif fmt == "bsr":
-        out = bsr_from_dense(a, block=block, stats=stats)
+        out = bsr_from_dense(a, block=stats.block, stats=stats)
     elif fmt == "ell":
         out = ell_from_csr(csr_from_dense(a))
     elif fmt == "csr":

@@ -349,3 +349,111 @@ class TestBlockCyclic:
             assert registry.select("matmul", a, b).name == "mesh_psum_2d"
             got = np.asarray(ops.matmul(a, b))
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# satellites: block-CG deflation + the autotuned BSR block size
+# ---------------------------------------------------------------------------
+
+class TestBlockCGDeflation:
+    """Rank-revealing Gram solves: converged and dependent RHS columns
+    deflate mid-solve instead of poisoning the shared Krylov space
+    (ROADMAP item closed)."""
+
+    def test_duplicate_columns_no_longer_nan(self):
+        """A rank-deficient panel (duplicate + scaled-duplicate columns)
+        made the plain k×k solves singular -> NaN for *every* column; the
+        rank-revealing factor drops the dependent directions and all
+        columns converge."""
+        n = 256
+        a = _banded(n, 31, seed=1)
+        b = _rhs(n, 4, seed=0)
+        b[:, 1] = b[:, 0]                       # exact duplicate
+        b[:, 3] = 2.0 * b[:, 2]                 # scaled duplicate
+        res = solvers.cg_block_solve(S.matrix(a), b, stop=1e-10,
+                                     max_iters=2 * n)
+        x = res.x.read()
+        assert np.isfinite(x).all()
+        rel = (np.linalg.norm(a @ x - b, axis=0)
+               / np.linalg.norm(b, axis=0)).max()
+        assert rel < 1e-5
+        # duplicate RHS -> duplicate (scaled) solutions
+        np.testing.assert_allclose(x[:, 1], x[:, 0], rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(x[:, 3], 2.0 * x[:, 2], rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_converged_column_freezes_others_continue(self):
+        """A zero RHS column is converged from iteration 0; it deflates
+        (x stays 0, no NaN) while the live columns still solve."""
+        n = 256
+        a = _banded(n, 31, seed=2)
+        b = _rhs(n, 4, seed=2)
+        b[:, 2] = 0.0
+        res = solvers.cg_block_solve(S.matrix(a), b, stop=1e-8,
+                                     max_iters=2 * n)
+        x = res.x.read()
+        assert np.isfinite(x).all()
+        np.testing.assert_allclose(x[:, 2], 0.0, atol=1e-6)
+        live = [0, 1, 3]
+        rel = (np.linalg.norm(a @ x[:, live] - b[:, live], axis=0)
+               / np.linalg.norm(b[:, live], axis=0)).max()
+        assert rel < 1e-5
+
+    def test_full_rank_panel_unchanged(self):
+        """On a healthy panel the rank-revealing solves agree with the
+        plain factorisation: same convergence as the Table-2 contract."""
+        n, bw = 256, 31
+        a = banded_spd(n, bw, seed=7).astype(np.float32)
+        b = _rhs(n, 4, seed=7)
+        res = solvers.cg_block_solve(S.matrix(a), b, stop=1e-12,
+                                     max_iters=2 * n)
+        rel = (np.linalg.norm(a @ res.x.read() - b, axis=0)
+               / np.linalg.norm(b, axis=0)).max()
+        assert rel < 1e-5
+        assert int(res.iterations) < n // 4     # still Krylov-sharing fast
+
+
+class TestBSRBlockAutotune:
+    """sparse.matrix probes block_fill at 8/16/32 and keys the winner into
+    the autotune cache (op=bsr_block); block= still pins (ROADMAP item)."""
+
+    @pytest.mark.parametrize("edge", [8, 16, 32])
+    def test_picks_the_clustering_granularity(self, edge):
+        a = _blocked(256, block=edge, nblocks=(60 * 64) // (edge * edge),
+                     seed=edge)
+        m = S.matrix(a)
+        assert S.format_of(m) == "bsr"
+        assert m.block == edge
+        x = _rhs(256, 8, seed=edge)
+        got = C.unwrap(C.wrap(S.spmm(m, x)))
+        np.testing.assert_allclose(np.asarray(got), a @ x, rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_explicit_block_still_pins(self):
+        a = _blocked(256, block=16, nblocks=15, seed=5)
+        assert S.matrix(a, block=8).block == 8
+        assert S.matrix(a).block == 16
+
+    def test_winner_persists_under_autotune(self, tmp_path, monkeypatch):
+        import json
+
+        from repro.sparse.selector import autotune_block
+
+        cache = tmp_path / "autotune.json"
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache))
+        monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+        a = _blocked(256, block=32, nblocks=8, seed=6)
+        best, stats = autotune_block(a)
+        assert best == 32 and stats.block == 32
+        data = json.loads(cache.read_text())
+        keys = [k for k in data if k.startswith("bsr_block|")]
+        assert keys and data[keys[0]] == {"block": 32}
+        # a cache hit short-circuits the probe to the persisted block
+        again, _ = autotune_block(a)
+        assert again == 32
+
+    def test_indivisible_shape_keeps_default_probe(self):
+        a = np.zeros((30, 30), np.float32)
+        a[:3, :3] = 1.0
+        m = S.matrix(a)         # 30 tiles by none of 8/16/32: not BSR
+        assert S.format_of(m) != "bsr"
