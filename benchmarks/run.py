@@ -17,6 +17,14 @@ forced before jax init), chip variants at O2, the mesh-scoped shard_map
 variants — including the 2-D matmul tiling and the O4 hierarchical
 reduction plans — beyond.
 
+``--autotune-sweep`` is the offline calibration pass (DESIGN.md §11): every
+registered variant of matmul / spmv / spmm / fft / flash_attention timed
+end-to-end through dispatch per mesh shape, writing the measured cost model
+(``results/costmodel.json``) plus — under ``REPRO_AUTOTUNE=1`` — the block
+autotune cache, including the eager upgrade of mesh-scoped block entries a
+shard_map trace could only default-mark.  ``--tiny`` shrinks the inputs to
+CI-smoke sizes.
+
 The ``--json-out`` payload records, per suite, the row data, wall time,
 status, the kernel plane the registry resolved while it ran, and the
 device count / mesh shapes / axis roles it saw, so ``BENCH_*.json``
@@ -45,10 +53,17 @@ def main(argv=None) -> int:
     ap.add_argument("--scaling-sweep", action="store_true",
                     help="time the four paper kernels at 1/2/4/8 devices "
                          "(speedup-vs-devices; forces 8 fake host devices)")
+    ap.add_argument("--autotune-sweep", action="store_true",
+                    help="calibrate the measured cost model: time every "
+                         "registered variant per op per mesh shape and "
+                         "write results/costmodel.json (+ the block cache "
+                         "under REPRO_AUTOTUNE=1)")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-smoke input sizes for --autotune-sweep")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
 
-    if args.scaling_sweep:
+    if args.scaling_sweep or args.autotune_sweep:
         # Must precede the first jax import — jax locks the device count at
         # init.  An explicit caller-provided count wins.
         flags = os.environ.get("XLA_FLAGS", "")
@@ -69,6 +84,35 @@ def main(argv=None) -> int:
             "axis_roles": dict(zip(ctx.topology.axis_names,
                                    ctx.topology.roles))
             if ctx.topology else {}}
+
+    if args.autotune_sweep:
+        from benchmarks import autotune_sweep
+        from repro.core import costmodel
+        # --only speaks suite names; translate to the registry op swept
+        op_of = {"mod2am": "matmul", "mod2as": "solver_spmv", "mod2f": "fft",
+                 "spmm": "spmm", "attention": "flash_attention"}
+        t0 = time.time()
+        try:
+            rows = autotune_sweep.main(only=op_of.get(args.only),
+                                       tiny=args.tiny)
+            model = costmodel.get_model()
+            entry = {"status": "ok", "rows": rows,
+                     "costmodel_path": model.path,
+                     "costmodel_keys": len(model),
+                     "meshes": sorted({r["mesh"] for r in rows}),
+                     "autotune_enabled":
+                         os.environ.get("REPRO_AUTOTUNE", "") != ""}
+        except Exception as e:
+            print(f"[autotune_sweep] FAILED: {type(e).__name__}: {e}")
+            entry = {"status": "error", "error": f"{type(e).__name__}: {e}"}
+        entry["seconds"] = round(time.time() - t0, 3)
+        entry["backend"] = registry.resolve_backend()
+        payload = {"meta": meta, "suites": {"autotune_sweep": entry}}
+        if args.json_out:
+            with open(args.json_out, "w") as f:
+                json.dump(payload, f, default=str)
+        print("\nautotune sweep complete")
+        return 1 if entry["status"] == "error" else 0
 
     if args.scaling_sweep:
         from benchmarks import scaling_sweep

@@ -42,7 +42,7 @@ from repro.core.ops import (
 from repro.core.control import arbb_for, arbb_while, arbb_if, unrolled
 from repro.core.closure import call, capture, emap, Closure, CallClosure
 from repro.core.execlevel import ExecLevel, ExecContext, use_level, current
-from repro.core import registry
+from repro.core import costmodel, registry
 from repro.core.registry import (dispatch, register, use_backend,
                                  resolve_backend)
 from repro.core.topology import MeshTopology, axis_roles, topology_of
@@ -56,6 +56,7 @@ __all__ = [
     "arbb_for", "arbb_while", "arbb_if", "unrolled",
     "call", "capture", "emap", "Closure", "CallClosure",
     "ExecLevel", "ExecContext", "use_level", "current",
-    "registry", "dispatch", "register", "use_backend", "resolve_backend",
+    "costmodel", "registry",
+    "dispatch", "register", "use_backend", "resolve_backend",
     "MeshTopology", "axis_roles", "topology_of",
 ]

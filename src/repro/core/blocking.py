@@ -19,7 +19,10 @@ there is no cache entry for (op, shape, dtype), the candidates are measured
 on the spot with the real arguments and the winner is persisted — ArBB's
 "optimise for the target architecture detected at runtime", made sticky.
 Measurement is skipped under a jax trace (timings there would be
-meaningless) and any candidate that fails to compile is simply dropped.
+meaningless) — the defaults are then cached *marked* (``_default``) so a
+later eager resolve, or the autotune sweep's ``premeasure`` hook, upgrades
+them with a real measurement instead of pinning defaults forever — and any
+candidate that fails to compile is simply dropped.
 
 Cache keys carry the ambient *mesh* (DESIGN.md §8):
 
@@ -46,14 +49,31 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["round_up", "AutotuneCache", "get_cache", "autotune_enabled",
-           "ambient_scope_key", "resolve_blocks", "blocked",
-           "DEFAULT_CACHE_PATH"]
+           "ambient_scope_key", "resolve_blocks", "blocked", "premeasure",
+           "upgrade_legacy_keys", "PREMEASURE", "DEFAULT_CACHE_PATH"]
 
 DEFAULT_CACHE_PATH = os.path.join("results", "autotune.json")
 
 
 def round_up(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def upgrade_legacy_keys(raw: Mapping[str, dict]) -> tuple[dict, int]:
+    """Upgrade pre-mesh three-part keys (``op|dims|dtype``) to the modern
+    five-part scheme (``...|chip|-``).  Modern keys load first and legacy
+    keys merge via ``setdefault``, so a stale pre-mesh entry never clobbers
+    a fresher chip entry.  Shared by the block cache and the cost model
+    (:mod:`repro.core.costmodel`), which persist side by side under the
+    same key scheme."""
+    data: dict[str, dict] = {k: v for k, v in raw.items()
+                             if k.count("|") != 2}
+    legacy = 0
+    for k, v in raw.items():
+        if k.count("|") == 2:            # pre-mesh schema: op|dims|dtype
+            data.setdefault(f"{k}|chip|-", v)
+            legacy += 1
+    return data, legacy
 
 
 def ambient_scope_key() -> tuple[str, str]:
@@ -84,6 +104,17 @@ class AutotuneCache:
         shape = ",".join(f"{k}={v}" for k, v in sorted(dims.items()))
         return f"{op}|{shape}|{dtype}|{scope}|{mesh}"
 
+    @staticmethod
+    def parse_key(key: str) -> tuple[str, dict[str, int], str, str, str]:
+        """Invert :meth:`key`: ``(op, dims, dtype, scope, mesh)``."""
+        op, shape, dtype, scope, mesh = key.split("|")
+        dims = {}
+        if shape:
+            for part in shape.split(","):
+                k, v = part.split("=")
+                dims[k] = int(v)
+        return op, dims, dtype, scope, mesh
+
     def _load(self) -> dict[str, dict]:
         if self._data is None:
             try:
@@ -91,15 +122,7 @@ class AutotuneCache:
                     raw = json.load(f)
             except (FileNotFoundError, json.JSONDecodeError):
                 raw = {}
-            # modern 5-part keys first; legacy keys upgrade via setdefault
-            # so a stale pre-mesh entry never clobbers a fresher chip entry
-            data: dict[str, dict] = {k: v for k, v in raw.items()
-                                     if k.count("|") != 2}
-            legacy = 0
-            for k, v in raw.items():
-                if k.count("|") == 2:        # pre-mesh schema: op|dims|dtype
-                    data.setdefault(f"{k}|chip|-", v)
-                    legacy += 1
+            data, legacy = upgrade_legacy_keys(raw)
             if legacy:
                 logging.getLogger(__name__).info(
                     "autotune cache %s: upgraded %d legacy key(s) to chip "
@@ -116,13 +139,29 @@ class AutotuneCache:
             return None
         return {k: int(v) for k, v in entry.items() if not k.startswith("_")}
 
+    def entry(self, key: str) -> Optional[dict]:
+        """The raw entry including metadata (``_seconds``, ``_default``)."""
+        entry = self._load().get(key)
+        return dict(entry) if entry is not None else None
+
+    def pending_defaults(self) -> list[str]:
+        """Keys whose blocks were pinned *without* measurement (a trace was
+        ambient when they resolved) — what the sweep's eager premeasure hook
+        upgrades (DESIGN.md §11)."""
+        return sorted(k for k, v in self._load().items()
+                      if isinstance(v, dict) and v.get("_default"))
+
     def put(self, key: str, blocks: Mapping[str, int],
-            seconds: Optional[float] = None) -> None:
+            seconds: Optional[float] = None, default: bool = False) -> None:
         with self._lock:
             data = self._load()
             entry: dict[str, Any] = {k: int(v) for k, v in blocks.items()}
             if seconds is not None:
                 entry["_seconds"] = round(seconds, 9)
+            if default:
+                # unmeasured defaults, pinned under a trace: marked so a
+                # later eager resolve re-measures instead of hitting forever
+                entry["_default"] = True
             data[key] = entry
             d = os.path.dirname(self.path)
             if d:
@@ -163,13 +202,23 @@ def resolve_blocks(
     ``measure(blocks) -> seconds`` runs one candidate; pass None when timing
     is impossible (e.g. under a trace).  The cache key carries the ambient
     scope/mesh (see :func:`ambient_scope_key`): inside a shard_map variant
-    the entry is tuned per shard shape *and* per mesh shape."""
+    the entry is tuned per shard shape *and* per mesh shape.
+
+    With autotune enabled but a trace ambient, the defaults are cached
+    *marked* (``_default``) rather than silently pinned: a mesh-scoped
+    first call is always inside shard_map tracing, so an unmarked entry
+    would freeze the defaults forever.  A later eager resolve of the same
+    key — a chip call, or the sweep's :func:`premeasure` hook — sees the
+    marker and upgrades the entry with a real measurement."""
     cache = get_cache()
     key = AutotuneCache.key(op, dims, dtype, *ambient_scope_key())
-    hit = cache.lookup(key)
-    if hit is not None:
+    raw = cache.entry(key)
+    can_measure = bool(autotune_enabled() and candidates
+                       and measure is not None)
+    if raw is not None and not (raw.get("_default") and can_measure):
+        hit = {k: int(v) for k, v in raw.items() if not k.startswith("_")}
         return {**defaults, **hit}
-    if autotune_enabled() and candidates and measure is not None:
+    if can_measure:
         best: Optional[dict[str, int]] = None
         best_t = float("inf")
         for cand in (defaults, *candidates):
@@ -183,6 +232,8 @@ def resolve_blocks(
         if best is not None:
             cache.put(key, best, seconds=best_t)
             return best
+    if autotune_enabled() and measure is None and candidates and raw is None:
+        cache.put(key, defaults, default=True)
     return dict(defaults)
 
 
@@ -198,6 +249,22 @@ def _dims_of(args: Sequence[Any],
 
 def _is_tracing(args: Sequence[Any]) -> bool:
     return any(isinstance(a, jax.core.Tracer) for a in args)
+
+
+#: op -> eager premeasure hook, registered by :func:`blocked` — the sweep's
+#: way to measure a (dims, scope, mesh) block entry *outside* any trace with
+#: concrete shard-shaped arguments (DESIGN.md §11).
+PREMEASURE: dict[str, Callable] = {}
+
+
+def premeasure(op: str, *args: Any, interpret: bool = False) -> dict[str, int]:
+    """Eagerly measure op's block candidates on ``args`` under the ambient
+    scope key, upgrading a default-marked entry.  ``args`` must be concrete
+    (the whole point is escaping the trace)."""
+    if op not in PREMEASURE:
+        raise LookupError(f"op {op!r} has no blocked() combinator; "
+                          f"premeasurable: {sorted(PREMEASURE)}")
+    return PREMEASURE[op](*args, interpret=interpret)
 
 
 def blocked(
@@ -262,5 +329,19 @@ def blocked(
         return padded_call(*args, blocks=tuple(sorted(bl.items())),
                            interpret=interpret)
 
+    def premeasure_op(*args, interpret: bool = False) -> dict[str, int]:
+        """Eager block measurement with these concrete args under the
+        *ambient* scope key — call inside ``use_level(O3/O4, mesh)`` with
+        shard-local shapes to fill the mesh-scoped entries a traced
+        shard_map dispatch could only default-mark."""
+        if _is_tracing(args):
+            raise ValueError(f"premeasure({op!r}) needs concrete (eager) "
+                             "arrays; it exists to escape the trace")
+        dims = _dims_of(args, pad)
+        return resolve_blocks(op, dims, str(args[0].dtype), defaults,
+                              candidates, _measure(args, interpret))
+
     wrapped.padded_call = padded_call
+    wrapped.premeasure = premeasure_op
+    PREMEASURE[op] = premeasure_op
     return wrapped

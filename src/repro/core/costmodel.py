@@ -1,0 +1,270 @@
+"""Measured cost model — the calibrated half of the dispatch brain.
+
+The paper's core result is a *measured* comparison (ArBB vs MKL vs OpenMP
+GFLOP/s per kernel, Figs. 1-7), yet dispatch historically ranked variants
+by hand-written ``cost=`` priors.  This module holds what the offline
+autotune sweep (``benchmarks/autotune_sweep.py``) actually measured — whole
+dispatched-call seconds per variant, shard_map/collective overhead included
+— plus the roofline-predicted time for the same call, and feeds it back
+into :meth:`repro.core.registry.OperatorRegistry.select` so observed
+roofline position, not registration order, ranks the variants
+(DESIGN.md §11).
+
+Keys reuse the autotune cache's scheme (``op|dims|dtype|scope|mesh``,
+:meth:`repro.core.blocking.AutotuneCache.key`) with a *generic* argument
+signature instead of the blocking layer's per-op dim names — dispatch must
+derive it for any op without op-specific knowledge:
+
+    matmul|a0.0=256,a0.1=256,a1.0=256,a1.1=256|float32|chip|-
+    flash_attention|a0.0=2,...,causal=1|float32|mesh|data8xmodel1
+
+Every measurement is stored twice: under the exact key and under a *shape
+class* key (``~``-prefixed op, every dim bucketed to the next power of two)
+so one sweep point covers the whole class — exact hits win, class hits
+catch nearby shapes.  Legacy three-part keys merge on load exactly as the
+autotune cache's do (``op|dims|dtype`` → ``...|chip|-``).
+
+Entry format (one dict per key, one record per variant)::
+
+    {"pallas": {"seconds": 3.1e-4, "gflops": 108.2,
+                "predicted_seconds": 1.7e-4, "hw": "tpu-v5e"}, ...}
+
+The file lives beside the block cache (``results/costmodel.json``; path
+override via ``REPRO_COSTMODEL``).  Precedence at dispatch is
+``variant=`` pin > requested plane > calibrated cost > static prior, and a
+singleton measurement never re-ranks (a partially calibrated model must
+not promote the one variant that happens to have been measured).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Mapping, Optional, Sequence
+
+from repro.core.blocking import AutotuneCache, upgrade_legacy_keys
+from repro.utils.roofline import HW, TPU_V5E
+
+__all__ = ["CostModel", "get_model", "signature", "shape_class", "dtype_of",
+           "arg_bytes", "predicted_seconds", "DEFAULT_MODEL_PATH"]
+
+DEFAULT_MODEL_PATH = os.path.join("results", "costmodel.json")
+
+#: shape-class keys prefix the op with this marker so exact and class
+#: entries can never collide (op names never start with it).
+CLASS_MARK = "~"
+
+
+# ---------------------------------------------------------------------------
+# argument signatures
+# ---------------------------------------------------------------------------
+
+def signature(args: Sequence[Any],
+              kwargs: Optional[Mapping[str, Any]] = None) -> dict[str, int]:
+    """Generic dims of a call: every axis of every shaped positional arg
+    (``a<i>.<axis>``) plus int/bool kwargs (``causal=1``).  Shapeless args
+    (offset tuples, configs) contribute nothing; an all-shapeless call has
+    an empty signature and is never calibrated."""
+    dims: dict[str, int] = {}
+    for i, a in enumerate(args):
+        shape = getattr(a, "shape", None)
+        if shape is None:
+            continue
+        try:
+            for ax, s in enumerate(shape):
+                dims[f"a{i}.{ax}"] = int(s)
+        except TypeError:
+            continue
+    for k, v in (kwargs or {}).items():
+        if isinstance(v, bool) or (isinstance(v, int) and not hasattr(v, "shape")):
+            dims[k] = int(v)
+    return dims
+
+
+def shape_class(dims: Mapping[str, int]) -> dict[str, int]:
+    """Bucket every dim to the next power of two — the shape class one
+    sweep measurement speaks for (256 and 250 land in the same class; 257
+    does not)."""
+    return {k: (1 << (int(v) - 1).bit_length()) if v > 0 else 0
+            for k, v in dims.items()}
+
+
+def dtype_of(args: Sequence[Any]) -> str:
+    for a in args:
+        dt = getattr(a, "dtype", None)
+        if dt is not None:
+            return str(dt)
+    return "-"
+
+
+def arg_bytes(args: Sequence[Any]) -> int:
+    """Total bytes the call's shaped arguments occupy — the memory-term
+    numerator the roofline prediction uses (a lower bound: each operand
+    read once)."""
+    total = 0
+    for a in args:
+        nb = getattr(a, "nbytes", None)
+        if nb is not None:
+            total += int(nb)
+            continue
+        shape = getattr(a, "shape", None)
+        dt = getattr(a, "dtype", None)
+        if shape is not None and dt is not None:
+            n = 1
+            for s in shape:
+                n *= int(s)
+            total += n * getattr(dt, "itemsize", 4)
+    return total
+
+
+def predicted_seconds(flops: Optional[float], bytes_moved: Optional[float],
+                      hw: HW = TPU_V5E) -> Optional[float]:
+    """Two-term roofline prediction for one kernel call: max(compute term,
+    memory term) on ``hw`` (:mod:`repro.utils.roofline` owns the three-term
+    whole-step version; a single dispatched call has no collective bytes
+    the HLO parser hasn't already folded into the measurement)."""
+    terms = []
+    if flops:
+        terms.append(float(flops) / hw.peak_flops)
+    if bytes_moved:
+        terms.append(float(bytes_moved) / hw.hbm_bw)
+    return max(terms) if terms else None
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+class CostModel:
+    """JSON-backed per-variant measurement store: key -> {variant: record}.
+
+    Shares the autotune cache's key scheme and legacy-key upgrade so the
+    two files stay side-by-side interpretable (DESIGN.md §11)."""
+
+    def __init__(self, path: Optional[str] = None) -> None:
+        self.path = path or os.environ.get("REPRO_COSTMODEL",
+                                           DEFAULT_MODEL_PATH)
+        self._data: Optional[dict[str, dict]] = None
+        self._lock = threading.Lock()
+
+    # -- keys ---------------------------------------------------------------
+
+    @staticmethod
+    def key(op: str, dims: Mapping[str, int], dtype: str,
+            scope: str = "chip", mesh: str = "-") -> str:
+        return AutotuneCache.key(op, dims, dtype, scope, mesh)
+
+    @staticmethod
+    def class_key(op: str, dims: Mapping[str, int], dtype: str,
+                  scope: str = "chip", mesh: str = "-") -> str:
+        return AutotuneCache.key(f"{CLASS_MARK}{op}", shape_class(dims),
+                                 dtype, scope, mesh)
+
+    # -- storage ------------------------------------------------------------
+
+    def _load(self) -> dict[str, dict]:
+        if self._data is None:
+            try:
+                with open(self.path) as f:
+                    raw = json.load(f)
+            except (FileNotFoundError, json.JSONDecodeError):
+                raw = {}
+            self._data, _ = upgrade_legacy_keys(raw)
+        return self._data
+
+    def _flush(self, data: dict) -> None:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = f"{self.path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+    # -- recording ----------------------------------------------------------
+
+    def record(self, op: str, variant: str, *, seconds: float,
+               args: Sequence[Any] = (),
+               kwargs: Optional[Mapping[str, Any]] = None,
+               dims: Optional[Mapping[str, int]] = None,
+               dtype: Optional[str] = None,
+               scope: str = "chip", mesh: str = "-",
+               flops: Optional[float] = None,
+               bytes_moved: Optional[float] = None,
+               hw: HW = TPU_V5E) -> dict:
+        """Store one measured (variant, shape, scope, mesh) point under both
+        the exact and the shape-class key; latest measurement wins."""
+        dims = dict(dims) if dims is not None else signature(args, kwargs)
+        dtype = dtype or dtype_of(args)
+        rec: dict[str, Any] = {"seconds": round(float(seconds), 9)}
+        if flops:
+            rec["gflops"] = round(flops / seconds / 1e9, 6)
+        pred = predicted_seconds(flops, bytes_moved, hw)
+        if pred is not None:
+            rec["predicted_seconds"] = round(pred, 12)
+            rec["hw"] = hw.name
+        with self._lock:
+            data = self._load()
+            for key in (self.key(op, dims, dtype, scope, mesh),
+                        self.class_key(op, dims, dtype, scope, mesh)):
+                data.setdefault(key, {})[variant] = rec
+            self._flush(data)
+        return rec
+
+    # -- lookup -------------------------------------------------------------
+
+    def seconds_for(self, op: str, args: Sequence[Any] = (),
+                    kwargs: Optional[Mapping[str, Any]] = None, *,
+                    scope: str = "chip", mesh: str = "-") -> dict[str, float]:
+        """Measured whole-call seconds per variant for this call shape —
+        exact key first, shape-class fallback, ``{}`` when uncalibrated."""
+        dims = signature(args, kwargs)
+        if not dims:
+            return {}
+        dtype = dtype_of(args)
+        data = self._load()
+        for key in (self.key(op, dims, dtype, scope, mesh),
+                    self.class_key(op, dims, dtype, scope, mesh)):
+            entry = data.get(key)
+            if entry:
+                return {name: float(rec["seconds"])
+                        for name, rec in entry.items() if "seconds" in rec}
+        return {}
+
+    def agreement(self, op: Optional[str] = None) -> list[dict]:
+        """(measured, predicted) pairs for every exact-key record carrying
+        both — the sweep's roofline-position scatter (how far measured
+        seconds sit from the model's prediction)."""
+        rows = []
+        for key, entry in sorted(self._load().items()):
+            kop = key.split("|", 1)[0]
+            if kop.startswith(CLASS_MARK):
+                continue
+            if op is not None and kop != op:
+                continue
+            for variant, rec in sorted(entry.items()):
+                if "seconds" in rec and "predicted_seconds" in rec:
+                    rows.append({
+                        "op": kop, "key": key, "variant": variant,
+                        "measured_seconds": float(rec["seconds"]),
+                        "predicted_seconds": float(rec["predicted_seconds"]),
+                        "ratio": float(rec["seconds"])
+                        / max(float(rec["predicted_seconds"]), 1e-30),
+                    })
+        return rows
+
+
+_model: Optional[CostModel] = None
+
+
+def get_model() -> CostModel:
+    """The process cost model, re-opened if ``REPRO_COSTMODEL`` changed
+    (lets tests point it at a temp file, exactly like the block cache)."""
+    global _model
+    path = os.environ.get("REPRO_COSTMODEL", DEFAULT_MODEL_PATH)
+    if _model is None or _model.path != path:
+        _model = CostModel(path)
+    return _model

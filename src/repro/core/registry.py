@@ -29,7 +29,10 @@ Vocabulary (DESIGN.md §1):
     accepts(*args)     per-call predicate over concrete arguments (shapes,
                        layouts) — e.g. the DIA formulation only accepts DIA
                        matrices, flash kernels need block-divisible lengths
-    cost      static preference hint; lower wins among admissible variants
+    cost      static preference hint; lower wins among admissible variants.
+              Named tiers live on :class:`Cost`; when the measured cost
+              model (repro.core.costmodel, DESIGN.md §11) holds whole-call
+              seconds for this shape class, those outrank the static prior
 
 Selection rules (DESIGN.md §6):
 
@@ -65,13 +68,54 @@ from repro.core import execlevel
 from repro.core.topology import MeshTopology, topology_of
 
 __all__ = ["Variant", "SelectContext", "OperatorRegistry", "REGISTRY",
-           "select_context",
+           "select_context", "Cost",
            "register", "unregister", "dispatch", "select", "variants", "ops",
            "use_backend", "requested_backend", "resolve_backend", "PLANES",
            "SCOPES"]
 
 #: The kernel retargeting planes (ordered by preference on TPU).
 PLANES = ("pallas", "interpret", "xla")
+
+
+class Cost:
+    """Named static cost tiers — the one fallback source of truth behind the
+    calibrated cost model (DESIGN.md §11).
+
+    Every hand-maintained ``cost=`` ladder (kernels/ops.py, sparse/spmm.py,
+    numerics/spmv.py) derives from these constants instead of repeating raw
+    floats; when the cost model holds measured seconds for a shape class,
+    these priors are only the tie-break for uncalibrated variants.
+
+    Plane tiers: ``PALLAS`` (compiled kernel, production) < ``XLA_CHUNKED``
+    (streamed jnp schedule) < ``XLA`` (plain jnp reference) < ``ORACLE``
+    (always-correct, never-fast baseline) << ``INTERPRET`` (test harness).
+    Sparse-layout ranks (``DIA`` < ``BSR`` < ``ELL`` < ``CSR``) mirror the
+    format selector's strongest-first ordering; :meth:`formulation` offsets
+    a rank into a plane tier so per-format variant triples keep their
+    relative order across planes."""
+
+    PALLAS = 1.0
+    XLA_CHUNKED = 1.5
+    XLA = 2.0
+    ORACLE = 20.0
+    INTERPRET = 100.0
+
+    # sparse-layout formulation ranks (selector's strongest-first ordering)
+    DIA = 4.0
+    BSR = 5.0
+    ELL = 6.0
+    CSR = ORACLE
+
+    @staticmethod
+    def formulation(rank: float, plane: Optional[str] = None) -> float:
+        """A formulation rank offset into its plane's tier: pallas (and
+        DSL-level ``plane=None``) = rank, xla = rank + 0.5, interpret =
+        ``INTERPRET`` + rank."""
+        if plane == "xla":
+            return rank + 0.5
+        if plane == "interpret":
+            return Cost.INTERPRET + rank
+        return rank
 
 #: The selection scopes: one device vs the ambient O3/O4 mesh.
 SCOPES = ("chip", "mesh")
@@ -278,20 +322,56 @@ class OperatorRegistry:
                              f"registered: {sorted(table)}")
         return table[name]
 
+    def _calibrated(self, op: str, args: tuple, kwargs: dict,
+                    ctx: SelectContext,
+                    table: dict[str, Variant]) -> dict[str, float]:
+        """Measured whole-call seconds per variant from the cost model
+        (DESIGN.md §11) — ``{}`` when the model is absent, uncalibrated for
+        this shape class, or holds fewer than two of this op's variants (a
+        singleton measurement must not promote the one variant that
+        happened to be measured)."""
+        from repro.core import costmodel      # lazy: keep import graph thin
+
+        scope, mesh = ("mesh", ctx.topology.describe()) \
+            if ctx.scope == "mesh" and ctx.topology is not None \
+            else ("chip", "-")
+        measured = costmodel.get_model().seconds_for(
+            op, args, kwargs, scope=scope, mesh=mesh)
+        if len(set(measured) & set(table)) < 2:
+            return {}
+        return measured
+
     def select(self, op: str, *args: Any, variant: Optional[str] = None,
                **kwargs: Any) -> Variant:
-        """Pick the variant :func:`dispatch` would run (without running it)."""
+        """Pick the variant :func:`dispatch` would run (without running it).
+
+        Precedence (DESIGN.md §6 + §11): explicit ``variant=`` pin > scope
+        match > requested plane > **calibrated cost** (measured seconds
+        from the cost model for this shape class/scope/mesh, which also
+        outrank scope when present — observed roofline position beats the
+        mesh-first heuristic) > static ``cost=`` prior > name.  An
+        explicitly requested plane (``use_backend`` / ``REPRO_KERNELS``)
+        disables calibrated re-ranking: the knob is an instruction, the
+        model a measurement."""
         if variant is not None:
             return self.get(op, variant)
         ctx = select_context()
         req = requested_backend()
+        table = self._table(op)
+        measured = self._calibrated(op, args, kwargs, ctx, table) \
+            if req is None else {}
         # Scope match outranks the plane request: under an active mesh the
         # sharded formulation wins (ARBB_NUM_CORES reborn as mesh shape);
         # without one, mesh variants are unavailable and chip order is
-        # exactly what it always was.
+        # exactly what it always was.  Calibrated variants rank first, by
+        # measured seconds — the cost model is keyed by the ambient
+        # scope/mesh, so mesh and chip variants measured under the same
+        # context compare on observed time, not on the scope heuristic.
         ranked = sorted(
-            self._table(op).values(),
-            key=lambda v: (0 if v.scope == ctx.scope else 1,
+            table.values(),
+            key=lambda v: ((0, measured[v.name]) if v.name in measured
+                           else (1, 0.0),
+                           0 if v.scope == ctx.scope else 1,
                            0 if (req is not None and v.plane == req) else 1,
                            v.cost, v.name))
         for v in ranked:

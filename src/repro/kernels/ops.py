@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro.core import registry
 from repro.core.blocking import blocked, resolve_blocks
 from repro.core.registry import (use_backend as backend,          # noqa: F401
+                                 Cost,
                                  resolve_backend as current_backend)
 from repro.kernels import fft as fft_k
 from repro.kernels import flash_attention as fa_k
@@ -63,14 +64,15 @@ def _mm_overrides(block_m, block_n, block_k):
     return {"m": block_m, "n": block_n, "k": block_k}
 
 
-@registry.register("matmul", "pallas", plane="pallas", cost=1.0,
+@registry.register("matmul", "pallas", plane="pallas", cost=Cost.PALLAS,
                    doc="blocked MXU kernel (kernels/matmul.py)")
 def _matmul_pallas(a, b, *, block_m=None, block_n=None, block_k=None):
     return _matmul_blocked(a, b, interpret=False,
                            overrides=_mm_overrides(block_m, block_n, block_k))
 
 
-@registry.register("matmul", "interpret", plane="interpret", cost=100.0,
+@registry.register("matmul", "interpret", plane="interpret",
+                   cost=Cost.INTERPRET,
                    doc="same kernel, interpret mode (CPU validation)")
 def _matmul_interpret(a, b, *, block_m=None, block_n=None, block_k=None):
     return _matmul_blocked(a, b, interpret=True,
@@ -80,7 +82,7 @@ def _matmul_interpret(a, b, *, block_m=None, block_n=None, block_k=None):
 _matmul_ref_jit = jax.jit(ref.matmul_ref)
 
 
-@registry.register("matmul", "xla", plane="xla", cost=2.0,
+@registry.register("matmul", "xla", plane="xla", cost=Cost.XLA,
                    doc="pure-jnp reference (XLA dot)")
 def _matmul_xla(a, b, *, block_m=None, block_n=None, block_k=None):
     return _matmul_ref_jit(a, b)
@@ -112,13 +114,14 @@ _ell_blocked = blocked(
 )
 
 
-@registry.register("spmv_ell", "pallas", plane="pallas", cost=1.0,
+@registry.register("spmv_ell", "pallas", plane="pallas", cost=Cost.PALLAS,
                    doc="padded block-ELL kernel (kernels/spmv.py)")
 def _spmv_ell_pallas(values, cols, x):
     return _ell_blocked(values, cols, x, interpret=False)
 
 
-@registry.register("spmv_ell", "interpret", plane="interpret", cost=100.0)
+@registry.register("spmv_ell", "interpret", plane="interpret",
+                   cost=Cost.INTERPRET)
 def _spmv_ell_interpret(values, cols, x):
     return _ell_blocked(values, cols, x, interpret=True)
 
@@ -126,7 +129,7 @@ def _spmv_ell_interpret(values, cols, x):
 _spmv_ell_ref_jit = jax.jit(ref.spmv_ell_ref)
 
 
-@registry.register("spmv_ell", "xla", plane="xla", cost=2.0,
+@registry.register("spmv_ell", "xla", plane="xla", cost=Cost.XLA,
                    doc="gather + row-reduce reference")
 def _spmv_ell_xla(values, cols, x):
     return _spmv_ell_ref_jit(values, cols, x)
@@ -141,13 +144,14 @@ def _spmv_dia_impl(diags, offsets, x, interpret):
     return spmv_k.spmv_dia(diags, offsets, x, interpret=interpret)
 
 
-@registry.register("spmv_dia", "pallas", plane="pallas", cost=1.0,
+@registry.register("spmv_dia", "pallas", plane="pallas", cost=Cost.PALLAS,
                    doc="banded shifted-FMA kernel, gather-free")
 def _spmv_dia_pallas(diags, offsets, x):
     return _spmv_dia_impl(diags, offsets, x, interpret=False)
 
 
-@registry.register("spmv_dia", "interpret", plane="interpret", cost=100.0)
+@registry.register("spmv_dia", "interpret", plane="interpret",
+                   cost=Cost.INTERPRET)
 def _spmv_dia_interpret(diags, offsets, x):
     return _spmv_dia_impl(diags, offsets, x, interpret=True)
 
@@ -155,7 +159,7 @@ def _spmv_dia_interpret(diags, offsets, x):
 _spmv_dia_ref_jit = jax.jit(ref.spmv_dia_ref, static_argnames=("offsets",))
 
 
-@registry.register("spmv_dia", "xla", plane="xla", cost=2.0)
+@registry.register("spmv_dia", "xla", plane="xla", cost=Cost.XLA)
 def _spmv_dia_xla(diags, offsets, x):
     return _spmv_dia_ref_jit(diags, offsets, x)
 
@@ -199,14 +203,14 @@ def _fft_accepts(x):
     return _pow2(x.shape[0])
 
 
-@registry.register("fft", "pallas", plane="pallas", cost=1.0,
+@registry.register("fft", "pallas", plane="pallas", cost=Cost.PALLAS,
                    accepts=_fft_accepts,
                    doc="split-stream butterfly stages (kernels/fft.py)")
 def _fft_pallas(x):
     return _fft_stages(x, interpret=False)
 
 
-@registry.register("fft", "interpret", plane="interpret", cost=100.0,
+@registry.register("fft", "interpret", plane="interpret", cost=Cost.INTERPRET,
                    accepts=_fft_accepts)
 def _fft_interpret(x):
     return _fft_stages(x, interpret=True)
@@ -215,7 +219,7 @@ def _fft_interpret(x):
 _fft_ref_jit = jax.jit(ref.fft_ref)
 
 
-@registry.register("fft", "xla", plane="xla", cost=2.0,
+@registry.register("fft", "xla", plane="xla", cost=Cost.XLA,
                    doc="jnp.fft reference")
 def _fft_xla(x):
     return _fft_ref_jit(x)
@@ -277,16 +281,16 @@ def _fa_kernel_variant(interpret):
 
 
 registry.register("flash_attention", "pallas", _fa_kernel_variant(False),
-                  plane="pallas", cost=1.0, accepts=_fa_accepts,
+                  plane="pallas", cost=Cost.PALLAS, accepts=_fa_accepts,
                   doc="online-softmax GQA kernel (kernels/flash_attention.py)")
 registry.register("flash_attention", "interpret", _fa_kernel_variant(True),
-                  plane="interpret", cost=100.0, accepts=_fa_accepts)
+                  plane="interpret", cost=Cost.INTERPRET, accepts=_fa_accepts)
 
 
 _attn_ref_jit = jax.jit(ref.attention_ref, static_argnames=("causal",))
 
 
-@registry.register("flash_attention", "xla", plane="xla", cost=2.0,
+@registry.register("flash_attention", "xla", plane="xla", cost=Cost.XLA,
                    doc="materialising oracle (short sequences)")
 def _attn_xla(q, k, v, *, causal=True, block_q=None, block_k=None):
     return _attn_ref_jit(q, k, v, causal=causal)
@@ -304,7 +308,8 @@ def _chunked_accepts(q, k, v, *, causal=True, block_q=None, block_k=None):
     return k.shape[2] >= 4096 and k.shape[2] % 1024 == 0
 
 
-@registry.register("flash_attention", "xla_chunked", plane="xla", cost=1.5,
+@registry.register("flash_attention", "xla_chunked", plane="xla",
+                   cost=Cost.XLA_CHUNKED,
                    accepts=_chunked_accepts,
                    doc="KV-streamed flash schedule at the XLA level")
 def _attn_xla_chunked(q, k, v, *, causal=True, block_q=None, block_k=None):
@@ -352,19 +357,20 @@ def _fa_state_accepts(q, k, v, *, causal=True, block_q=None, block_k=None):
 
 
 registry.register("flash_attention_state", "pallas",
-                  _fa_state_kernel_variant(False), plane="pallas", cost=1.0,
+                  _fa_state_kernel_variant(False), plane="pallas",
+                  cost=Cost.PALLAS,
                   accepts=_fa_state_accepts,
                   doc="GQA flash kernel emitting the (m, l) softmax state")
 registry.register("flash_attention_state", "interpret",
                   _fa_state_kernel_variant(True), plane="interpret",
-                  cost=100.0, accepts=_fa_state_accepts)
+                  cost=Cost.INTERPRET, accepts=_fa_state_accepts)
 
 
 _attn_state_ref_jit = jax.jit(ref.attention_state_ref,
                               static_argnames=("causal",))
 
 
-@registry.register("flash_attention_state", "xla", plane="xla", cost=2.0,
+@registry.register("flash_attention_state", "xla", plane="xla", cost=Cost.XLA,
                    accepts=_fa_state_accepts,
                    doc="materialising oracle returning (o, m, l)")
 def _attn_state_xla(q, k, v, *, causal=True, block_q=None, block_k=None):

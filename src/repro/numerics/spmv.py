@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import Dense, arbb_for, call, emap, section, shift, unwrap, wrap
 from repro.core import registry
+from repro.core.registry import Cost
 from repro.numerics.sparse import CSR, DIA, ELL, csr_row_ids
 
 __all__ = ["arbb_spmv1", "arbb_spmv2", "spmv_ell", "spmv_dia",
@@ -142,15 +143,18 @@ def _takes(layout):
                               and getattr(unwrap(v), "ndim", 1) == 1)
 
 
-registry.register("solver_spmv", "spmv1", arbb_spmv1, cost=40.0,
+# the ladder derives from the registry's named layout ranks (Cost.DIA <
+# Cost.ELL < Cost.CSR — one source of truth with the spmm plane); spmv1,
+# the paper's naive port, ranks behind its own contiguity rewrite.
+registry.register("solver_spmv", "spmv1", arbb_spmv1, cost=2 * Cost.CSR,
                   accepts=_takes(CSR),
                   doc="paper §3.2 port: map() over rows + recorded _for")
-registry.register("solver_spmv", "spmv2", arbb_spmv2, cost=20.0,
+registry.register("solver_spmv", "spmv2", arbb_spmv2, cost=Cost.CSR,
                   accepts=_takes(CSR),
                   doc="contiguity-exploiting flat segmented form")
-registry.register("solver_spmv", "ell", spmv_ell, cost=10.0,
+registry.register("solver_spmv", "ell", spmv_ell, cost=Cost.ELL,
                   accepts=_takes(ELL),
                   doc="rectangular ELL gather-multiply-reduce")
-registry.register("solver_spmv", "dia", spmv_dia, cost=5.0,
+registry.register("solver_spmv", "dia", spmv_dia, cost=Cost.DIA,
                   accepts=_takes(DIA),
                   doc="banded shifted-FMA, gather-free (CG fast path)")

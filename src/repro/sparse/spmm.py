@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.core import Dense, unwrap, wrap
 from repro.core import registry
+from repro.core.registry import Cost
 from repro.core.blocking import blocked, round_up
 from repro.kernels import ref
 from repro.kernels import spmm as spmm_k
@@ -146,27 +147,38 @@ def _spmm_csr(a: CSR, x, **_) -> Dense:
     return wrap(_csr_core(a.matvals, a.indx, a.rowp, unwrap(wrap(x))))
 
 
-# costs mirror the selector's strongest-first ranking (selector.FORMATS);
-# accepts discriminates by layout, so cross-layout order is documentation.
-registry.register("spmm", "dia", _spmm_dia, cost=4.0,
+# costs mirror the selector's strongest-first ranking (selector.FORMATS) via
+# the registry's named tiers (Cost.DIA < BSR < ELL < CSR; formulation()
+# offsets each rank into its plane tier — one source of truth, DESIGN.md
+# §11); accepts discriminates by layout, so cross-layout order is
+# documentation.
+registry.register("spmm", "dia", _spmm_dia, cost=Cost.formulation(Cost.DIA),
                   accepts=_panel_takes(DIA),
                   doc="banded shifted panel-FMAs, gather-free")
 registry.register("spmm", "bsr", _bsr_variant(False), plane="pallas",
-                  cost=5.0, accepts=_panel_takes(BSR),
+                  cost=Cost.formulation(Cost.BSR, "pallas"),
+                  accepts=_panel_takes(BSR),
                   doc="block-tile MXU FMAs (kernels/spmm.py)")
 registry.register("spmm", "bsr_interpret", _bsr_variant(True),
-                  plane="interpret", cost=105.0, accepts=_panel_takes(BSR))
-registry.register("spmm", "bsr_xla", _spmm_bsr_xla, plane="xla", cost=5.5,
+                  plane="interpret",
+                  cost=Cost.formulation(Cost.BSR, "interpret"),
+                  accepts=_panel_takes(BSR))
+registry.register("spmm", "bsr_xla", _spmm_bsr_xla, plane="xla",
+                  cost=Cost.formulation(Cost.BSR, "xla"),
                   accepts=_panel_takes(BSR),
                   doc="per-block dense products + block-row segment-sum")
 registry.register("spmm", "ell", _ell_variant(False), plane="pallas",
-                  cost=6.0, accepts=_panel_takes(ELL),
+                  cost=Cost.formulation(Cost.ELL, "pallas"),
+                  accepts=_panel_takes(ELL),
                   doc="row-gather × RHS panel (kernels/spmm.py)")
 registry.register("spmm", "ell_interpret", _ell_variant(True),
-                  plane="interpret", cost=106.0, accepts=_panel_takes(ELL))
-registry.register("spmm", "ell_xla", _spmm_ell_xla, plane="xla", cost=6.5,
+                  plane="interpret",
+                  cost=Cost.formulation(Cost.ELL, "interpret"),
                   accepts=_panel_takes(ELL))
-registry.register("spmm", "csr", _spmm_csr, cost=20.0,
+registry.register("spmm", "ell_xla", _spmm_ell_xla, plane="xla",
+                  cost=Cost.formulation(Cost.ELL, "xla"),
+                  accepts=_panel_takes(ELL))
+registry.register("spmm", "csr", _spmm_csr, cost=Cost.ORACLE,
                   accepts=_panel_takes(CSR),
                   doc="3-array oracle: nnz-stream gather + segment-sum")
 
@@ -205,7 +217,7 @@ def _route_spmm(m, v, **_) -> Dense:
     return registry.dispatch("spmm", m, wrap(v))
 
 
-registry.register("solver_spmv", "spmm", _route_spmm, cost=1.0,
+registry.register("solver_spmv", "spmm", _route_spmm, cost=Cost.PALLAS,
                   accepts=_route_accepts,
                   doc="multi-RHS seam: 2-D x (or BSR) routes to the spmm "
                       "plane; chip dispatch falls back to the XLA oracles "

@@ -112,6 +112,16 @@ class _F32Rng:
         return self._rng.uniform(*a, **k).astype(np.float32)
 
 
+@pytest.fixture(autouse=True)
+def _isolate_costmodel(monkeypatch, tmp_path):
+    """Point the measured cost model at a per-test temp path.  Selection
+    must be deterministic under test: a ``results/costmodel.json`` left
+    behind by a local sweep would otherwise re-rank dispatch for every
+    selection assertion in the suite (DESIGN.md §11 precedence).  Tests of
+    the model itself monkeypatch ``REPRO_COSTMODEL`` again on top."""
+    monkeypatch.setenv("REPRO_COSTMODEL", str(tmp_path / "costmodel.json"))
+
+
 @pytest.fixture
 def rng():
     return _F32Rng(0)
