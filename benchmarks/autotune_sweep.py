@@ -86,6 +86,25 @@ def _cases(tiny: bool) -> dict[str, list[tuple]]:
     cases["flash_attention"] = [(f"b{bq}h{hq}l{lq}d{d}", (q, kk, v),
                                  {"causal": True},
                                  4.0 * bq * hq * lq * lq * d)]
+
+    # masked cases: the MaskSpec's cost_dims() fingerprint keys these
+    # separately from the plain-causal case, so the dense <-> block-sparse
+    # crossover calibrates per mask structure (DESIGN.md §12).  FLOPs are
+    # the mask's useful work (dense flops x fill), making the per-variant
+    # GFLOP/s comparable: a dense kernel burning the masked-out work shows
+    # a proportionally worse roofline position.
+    from repro.sparse.maskcompiler import MaskSpec, dense_mask
+    win = MaskSpec(causal=True, window=lq // 4)
+    nt = lq // 16
+    pat = (np.random.default_rng(7).random((nt, nt)) < 0.15) \
+        | np.eye(nt, dtype=bool)
+    blk = MaskSpec.from_block_mask(pat, 16)
+    for tag, spec in (("win", win), ("blk", blk)):
+        fill = float(dense_mask(spec, lq, lq).mean())
+        cases["flash_attention"].append(
+            (f"b{bq}h{hq}l{lq}d{d}_{tag}", (q, kk, v),
+             {"causal": True, "mask": spec},
+             4.0 * bq * hq * lq * lq * d * fill))
     return cases
 
 

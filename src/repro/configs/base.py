@@ -30,6 +30,12 @@ class ModelConfig:
     rope_theta: float = 10_000.0
     m_rope: bool = False
     mrope_sections: tuple[int, ...] = ()     # splits head_dim/2 across t/h/w
+    # sparse attention pattern (LongFormer/BigBird-shaped archs): a causal
+    # sliding window plus optional global-attention token positions, lowered
+    # to a MaskSpec and dispatched to the block-sparse tile-skipping kernel
+    # when tile density warrants (DESIGN.md §12).  0 / () = plain causal.
+    attn_window: int = 0
+    attn_global_tokens: tuple[int, ...] = ()
 
     # MLP
     d_ff: int = 0
@@ -75,6 +81,18 @@ class ModelConfig:
     logit_softcap: float = 0.0
 
     # ------------------------------------------------------------------
+    def attn_mask_spec(self):
+        """The declarative attention mask of this architecture — a
+        :class:`repro.sparse.maskcompiler.MaskSpec` for sparse-attention
+        configs (``attn_window`` / ``attn_global_tokens``), None for plain
+        causal (the common case keeps the dense row-extent path)."""
+        if not self.attn_window and not self.attn_global_tokens:
+            return None
+        from repro.sparse.maskcompiler import MaskSpec
+        return MaskSpec(causal=True,
+                        window=self.attn_window or None,
+                        global_tokens=self.attn_global_tokens)
+
     @property
     def padded_vocab(self) -> int:
         """Embedding rows padded to a multiple of 256 — shardable 16-way and

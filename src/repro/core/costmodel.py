@@ -64,7 +64,13 @@ def signature(args: Sequence[Any],
     """Generic dims of a call: every axis of every shaped positional arg
     (``a<i>.<axis>``) plus int/bool kwargs (``causal=1``).  Shapeless args
     (offset tuples, configs) contribute nothing; an all-shapeless call has
-    an empty signature and is never calibrated."""
+    an empty signature and is never calibrated.
+
+    Structured kwargs may expose ``cost_dims() -> {str: int}`` to
+    contribute a fingerprint (``mask.window=256``) — how a
+    :class:`~repro.sparse.maskcompiler.MaskSpec` keeps differently-masked
+    calls of the same shapes in different shape classes, so the
+    dense ↔ block-sparse crossover calibrates per mask structure."""
     dims: dict[str, int] = {}
     for i, a in enumerate(args):
         shape = getattr(a, "shape", None)
@@ -78,6 +84,9 @@ def signature(args: Sequence[Any],
     for k, v in (kwargs or {}).items():
         if isinstance(v, bool) or (isinstance(v, int) and not hasattr(v, "shape")):
             dims[k] = int(v)
+        elif callable(getattr(v, "cost_dims", None)):
+            for sk, sv in v.cost_dims().items():
+                dims[f"{k}.{sk}"] = int(sv)
     return dims
 
 

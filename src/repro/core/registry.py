@@ -86,14 +86,17 @@ class Cost:
     floats; when the cost model holds measured seconds for a shape class,
     these priors are only the tie-break for uncalibrated variants.
 
-    Plane tiers: ``PALLAS`` (compiled kernel, production) < ``XLA_CHUNKED``
-    (streamed jnp schedule) < ``XLA`` (plain jnp reference) < ``ORACLE``
-    (always-correct, never-fast baseline) << ``INTERPRET`` (test harness).
-    Sparse-layout ranks (``DIA`` < ``BSR`` < ``ELL`` < ``CSR``) mirror the
-    format selector's strongest-first ordering; :meth:`formulation` offsets
-    a rank into a plane tier so per-format variant triples keep their
-    relative order across planes."""
+    Plane tiers: ``BLOCKSPARSE`` (tile-skipping kernel, admissible only when
+    its accepts() density gate passes — DESIGN.md §12) < ``PALLAS``
+    (compiled kernel, production) < ``XLA_CHUNKED`` (streamed jnp schedule)
+    < ``XLA`` (plain jnp reference) < ``ORACLE`` (always-correct, never-fast
+    baseline) << ``INTERPRET`` (test harness).  Sparse-layout ranks
+    (``DIA`` < ``BSR`` < ``ELL`` < ``CSR``) mirror the format selector's
+    strongest-first ordering; :meth:`formulation` offsets a rank into a
+    plane tier so per-format variant triples keep their relative order
+    across planes."""
 
+    BLOCKSPARSE = 0.75
     PALLAS = 1.0
     XLA_CHUNKED = 1.5
     XLA = 2.0

@@ -36,6 +36,18 @@ The variant registers as ``flash_attention``/``ring`` with ``scope='mesh'``
 and degrades to the chip kernel exactly like ``mesh_psum``/``mesh_spmm``:
 no ambient mesh, a 1-wide ring, or an L the ring doesn't divide all fall
 back with identical outputs, and explicit ``variant=`` still pins.
+
+Banded per-shard layouts (DESIGN.md §12): the hop-0 diagonal half-blocks
+are the one place zig-zag still pays causal imbalance — a causal call
+whose upper triangle is dead.  Those per-shard ``flash_attention_state``
+dispatches now run the tile-skipping kernel's degenerate banded layout
+(``kernels/flash_attention.py`` routes causal calls through compiled row
+extents), so each diagonal half-block walks only its live K tiles instead
+of launching the full grid and ``pl.when``-ing the upper triangle off —
+striped attention at sub-block granularity, with no change here beyond
+the dispatch.  Rich ``MaskSpec`` masks (windows / globals / block
+patterns) stay chip-scoped: ``accepts`` rejects them, selection degrades
+to the chip block-sparse kernel on replicated Q/K/V.
 """
 from __future__ import annotations
 
@@ -205,15 +217,24 @@ def _ring_zigzag_exec(plan: RingPlan, plane: str, blocks, length: int):
     return jax.jit(run)
 
 
-def ring_attention(q, k, v, *, causal: bool = True, block_q=None,
+def ring_attention(q, k, v, *, causal: bool = True, mask=None, block_q=None,
                    block_k=None, order: Optional[str] = None):
     """Sequence-parallel attention over the ambient mesh's ring.
 
     ``order`` picks the sequence-block layout: 'zigzag' (default for
     causal — balanced masking) or 'contiguous' (default for full
     attention, where there is no mask to balance).  ``block_q``/``block_k``
-    pin the per-shard kernel tiles, as on chip.
+    pin the per-shard kernel tiles, as on chip.  ``mask`` is honoured only
+    when trivially dense (it lowers to the causal flag); richer specs are
+    chip-scoped (see module docstring) and rejected here.
     """
+    if mask is not None:
+        if not mask.trivial_dense:
+            raise ValueError(
+                "ring attention only takes trivially-dense masks (plain "
+                "causal); window/global/block specs run the chip "
+                "block-sparse kernel")
+        causal = mask.causal
     plan = ambient_ring_plan()
     if plan is None:
         raise RuntimeError(
@@ -248,9 +269,16 @@ def _ring_available(ctx: registry.SelectContext) -> bool:
             ring_plan(ctx.mesh, ctx.topology).size > 1)
 
 
-def _ring_accepts(q, k, v, *, causal=True, block_q=None, block_k=None):
+def _ring_accepts(q, k, v, *, causal=True, mask=None, block_q=None,
+                  block_k=None):
     """Self-attention panels whose length the ring divides: 2W half-blocks
-    when causal (the zig-zag layout), W blocks when full."""
+    when causal (the zig-zag layout), W blocks when full.  Rich masks are
+    chip-scoped (block-sparse kernel); trivially-dense ones lower to the
+    causal flag."""
+    if mask is not None:
+        if not mask.trivial_dense:
+            return False
+        causal = mask.causal
     plan = ambient_ring_plan()
     if plan is None or plan.size <= 1:
         return False

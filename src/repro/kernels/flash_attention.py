@@ -25,6 +25,30 @@ f32 — which is what the sequence-parallel ring variant (DESIGN.md §10)
 needs to merge per-hop partial attention across K/V rotations: the
 unnormalised accumulator is recovered as ``o * l`` and two states combine
 exactly like two K panels inside this kernel.
+
+Block-sparse tile skipping (DESIGN.md §12).  The dense grid above launches
+every ``Lq/bq × Lk/bk`` step and masks dead ones — exactly the formulation
+the paper's sparse kernel exists to avoid.  :func:`flash_attention_tiles`
+instead takes a compiled :class:`~repro.sparse.maskcompiler.TileLayout`
+and walks, per Q row, *only the live K tiles*: a recorded ``fori_loop``
+over the row's ``rowp`` section with ``dynamic_slice`` K/V tile reads —
+the BSR traversal shape of :func:`repro.kernels.spmm.spmm_bsr_kernel`,
+with the SpMM accumulator replaced by the online-softmax (m, l, acc)
+carry.  Tiles are classified statically by the compiler: the FULL loop
+(``rowp[i]..mid[i]``) runs no masking at all; the PARTIAL edge loop
+(``mid[i]..rowp[i+1]``) applies either one iota band compare (positional
+specs — causal / sliding window) or a stored additive bias tile (global
+tokens, arbitrary block patterns).  The plain-causal dense path routes
+through the same machinery with the degenerate banded layout, so the
+K grid is *bounded* per Q row by the compiled row extents instead of
+launching every above-diagonal step and ``pl.when``-ing it off
+(``row_extents=False`` keeps the legacy grid reachable for A/B parity).
+
+Like the BSR SpMM kernel, index arrays ride as whole-array VMEM refs and
+K/V sit whole per (batch, kv-head) in VMEM; on TPU hardware the production
+form hoists rowp/cols into scalar prefetch (``pltpu.PrefetchScalarGridSpec``)
+and double-buffers K/V tile DMAs — correctness here is validated in
+interpret mode against the masked oracle (kernels/ref.py).
 """
 from __future__ import annotations
 
@@ -38,7 +62,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import compat
 
 __all__ = ["flash_attention_kernel", "flash_attention_state_kernel",
-           "flash_attention", "NEG_INF"]
+           "flash_attention_tiles_kernel", "flash_attention_tiles_state_kernel",
+           "flash_attention", "flash_attention_tiles", "NEG_INF"]
 
 #: The additive mask value (finite, so exp() underflows to 0 instead of
 #: producing inf - inf = nan) — shared by every attention formulation:
@@ -118,6 +143,167 @@ def flash_attention_state_kernel(
         ls_ref[0, 0] = l_ref[...]
 
 
+def _fa_tiles_scan(
+    iq, q, k, v, rowp_ref, mid_ref, prowp_ref, cols_ref, bias_ref,
+    *, scale, band, block_q: int, block_k: int,
+):
+    """Walk one Q row's live K tiles — the FULL loop (no masking), then the
+    PARTIAL edge loop — and return the row's final (m, l, acc) carry.
+
+    This is ``spmm_bsr_kernel``'s recorded _for over a ``rowp`` section with
+    the accumulator swapped for the online-softmax recurrence of
+    :func:`_fa_step`; ``band`` is the compiled ``(causal, window, offset)``
+    of positional specs (edge tiles masked by one iota compare) or None
+    (edge tiles add their stored bias tile)."""
+    d = q.shape[-1]
+    start = rowp_ref[iq]
+    midp = mid_ref[iq]
+    stop = rowp_ref[iq + 1]
+
+    def fold(p, carry, *, masked: bool):
+        m_prev, l_prev, acc = carry
+        c = cols_ref[p]
+        kb = jax.lax.dynamic_slice(k, (c * block_k, 0), (block_k, d))
+        vb = jax.lax.dynamic_slice(v, (c * block_k, 0), (block_k, d))
+        s = jnp.dot(q, kb.T, preferred_element_type=jnp.float32) * scale
+        if masked:
+            if band is not None:
+                causal, window, off = band
+                qpos = (iq * block_q + off) + jax.lax.broadcasted_iota(
+                    jnp.int32, (block_q, block_k), 0)
+                kpos = c * block_k + jax.lax.broadcasted_iota(
+                    jnp.int32, (block_q, block_k), 1)
+                if causal:
+                    s = jnp.where(qpos >= kpos, s, NEG_INF)
+                if window is not None:
+                    live = ((qpos - kpos) < window) if causal else (
+                        jnp.abs(qpos - kpos) < window)
+                    s = jnp.where(live, s, NEG_INF)
+            else:
+                pidx = prowp_ref[iq] + (p - midp)
+                s = s + bias_ref[pl.dslice(pidx, 1), :, :][0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        pmat = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(pmat, axis=1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            pmat.astype(v.dtype), vb, preferred_element_type=jnp.float32)
+        return m_cur, l_cur, acc
+
+    carry = (jnp.full((block_q,), NEG_INF, jnp.float32),
+             jnp.zeros((block_q,), jnp.float32),
+             jnp.zeros((block_q, d), jnp.float32))
+    carry = jax.lax.fori_loop(
+        start, midp, functools.partial(fold, masked=False), carry)
+    return jax.lax.fori_loop(
+        midp, stop, functools.partial(fold, masked=True), carry)
+
+
+def flash_attention_tiles_kernel(
+    rowp_ref, mid_ref, prowp_ref, cols_ref, bias_ref,
+    q_ref, k_ref, v_ref, o_ref,
+    *, scale: float, band, block_q: int, block_k: int,
+):
+    """One Q row per grid step; K grid replaced by the row's live-tile span.
+    Fully-dead rows (start == stop) fall through with l = 0 → output 0."""
+    m, l, acc = _fa_tiles_scan(
+        pl.program_id(2), q_ref[0, 0], k_ref[0, 0], v_ref[0, 0],
+        rowp_ref, mid_ref, prowp_ref, cols_ref, bias_ref,
+        scale=scale, band=band, block_q=block_q, block_k=block_k)
+    denom = jnp.maximum(l, 1e-30)
+    o_ref[0, 0] = (acc / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_tiles_state_kernel(
+    rowp_ref, mid_ref, prowp_ref, cols_ref, bias_ref,
+    q_ref, k_ref, v_ref, o_ref, ms_ref, ls_ref,
+    *, scale: float, band, block_q: int, block_k: int,
+):
+    """Same walk; the flush also emits the (m, l) state for ring merging."""
+    m, l, acc = _fa_tiles_scan(
+        pl.program_id(2), q_ref[0, 0], k_ref[0, 0], v_ref[0, 0],
+        rowp_ref, mid_ref, prowp_ref, cols_ref, bias_ref,
+        scale=scale, band=band, block_q=block_q, block_k=block_k)
+    denom = jnp.maximum(l, 1e-30)
+    o_ref[0, 0] = (acc / denom[:, None]).astype(o_ref.dtype)
+    ms_ref[0, 0] = m
+    ls_ref[0, 0] = l
+
+
+def flash_attention_tiles(
+    q: jax.Array,          # (batch, q_heads, seq_q, d)
+    k: jax.Array,          # (batch, kv_heads, seq_k, d)
+    v: jax.Array,          # (batch, kv_heads, seq_k, d)
+    layout,                # repro.sparse.maskcompiler.TileLayout
+    *,
+    scale: float | None = None,
+    return_state: bool = False,
+    interpret: bool = False,
+):
+    """Tile-skipping flash attention over a compiled mask layout.
+
+    The grid is (batch, q_heads, Lq/bq) — no K axis: each step walks only
+    its row's live tiles, full-first (see module docstring).  K-tile order
+    inside a row is ascending, so the plain-causal layout accumulates in
+    exactly the dense kernel's panel order (bitwise-equal f32 outputs)."""
+    batch, q_heads, seq_q, d = q.shape
+    _, kv_heads, seq_k, _ = k.shape
+    assert q_heads % kv_heads == 0
+    group = q_heads // kv_heads
+    bq, bk = layout.block_q, layout.block_k
+    assert layout.shape == (seq_q, seq_k), (layout.shape, seq_q, seq_k)
+    scale = scale if scale is not None else d ** -0.5
+    nq = seq_q // bq
+
+    if layout.ntiles == 0:          # every tile dead: attend to nothing
+        o = jnp.zeros_like(q)
+        if return_state:
+            state = (jnp.full((batch, q_heads, seq_q), NEG_INF, jnp.float32),
+                     jnp.zeros((batch, q_heads, seq_q), jnp.float32))
+            return (o,) + state
+        return o
+
+    kernel = functools.partial(
+        flash_attention_tiles_state_kernel if return_state
+        else flash_attention_tiles_kernel,
+        scale=scale, band=layout.band, block_q=bq, block_k=bk)
+
+    npart = layout.biases.shape[0]
+    o_spec = pl.BlockSpec((1, 1, bq, d), lambda b, h, iq: (b, h, iq, 0))
+    out_shape = jax.ShapeDtypeStruct(q.shape, q.dtype)
+    out_specs = o_spec
+    if return_state:
+        state_spec = pl.BlockSpec((1, 1, bq), lambda b, h, iq: (b, h, iq))
+        state_shape = jax.ShapeDtypeStruct((batch, q_heads, seq_q),
+                                           jnp.float32)
+        out_shape = (out_shape, state_shape, state_shape)
+        out_specs = (o_spec, state_spec, state_spec)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(batch, q_heads, nq),
+        in_specs=[
+            pl.BlockSpec((nq + 1,), lambda b, h, iq: (0,)),
+            pl.BlockSpec((nq,), lambda b, h, iq: (0,)),
+            pl.BlockSpec((nq,), lambda b, h, iq: (0,)),
+            pl.BlockSpec((layout.ntiles,), lambda b, h, iq: (0,)),
+            pl.BlockSpec((npart, bq, bk), lambda b, h, iq: (0, 0, 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, iq: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, seq_k, d),
+                         lambda b, h, iq: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, seq_k, d),
+                         lambda b, h, iq: (b, h // group, 0, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(layout.rowp, layout.mid, layout.prowp, layout.cols, layout.biases,
+      q, k, v)
+
+
 def flash_attention(
     q: jax.Array,          # (batch, q_heads, seq_q, d)
     k: jax.Array,          # (batch, kv_heads, seq_k, d)
@@ -128,11 +314,18 @@ def flash_attention(
     block_q: int = 128,
     block_k: int = 128,
     return_state: bool = False,
+    row_extents: bool = True,
     interpret: bool = False,
 ):
     """Flash attention; with ``return_state`` returns ``(o, m, l)`` where
     ``o`` is the normalised output and ``m`` / ``l`` the per-row softmax
-    max / denominator (batch, q_heads, seq_q) f32."""
+    max / denominator (batch, q_heads, seq_q) f32.
+
+    Causal calls route through :func:`flash_attention_tiles` with the
+    degenerate banded layout: the K grid is bounded per Q row by compiled
+    row extents instead of launching every above-diagonal panel and
+    ``pl.when``-ing it off.  ``row_extents=False`` restores the legacy
+    full-grid kernel (the A/B baseline for the parity benchmark)."""
     batch, q_heads, seq_q, d = q.shape
     _, kv_heads, seq_k, _ = k.shape
     assert q_heads % kv_heads == 0
@@ -141,6 +334,13 @@ def flash_attention(
     block_k = min(block_k, seq_k)
     assert seq_q % block_q == 0 and seq_k % block_k == 0
     scale = scale if scale is not None else d ** -0.5
+
+    if causal and row_extents:
+        from repro.sparse.maskcompiler import causal_layout
+        return flash_attention_tiles(
+            q, k, v, causal_layout(seq_q, seq_k, block_q, block_k),
+            scale=scale, return_state=return_state, interpret=interpret)
+
     grid = (batch, q_heads, seq_q // block_q, seq_k // block_k)
 
     kernel = functools.partial(

@@ -37,6 +37,8 @@ from repro.kernels import matmul as mm_k
 from repro.kernels import ref
 from repro.kernels import spmv as spmv_k
 from repro.numerics.fft import bitrev_permutation, split_stream_twiddles
+from repro.sparse.maskcompiler import compile_layout, dense_mask
+from repro.sparse.selector import BLOCKSPARSE_MAX_DENSITY
 
 __all__ = ["backend", "current_backend", "matmul", "spmv_ell", "spmv_dia",
            "fft", "flash_attention", "flash_attention_state"]
@@ -240,6 +242,16 @@ _FA_CANDIDATES = ({"q": 256}, {"k": 256}, {"q": 256, "k": 256},
                   {"q": 64, "k": 64})
 
 
+def _fit_block(n: int, target: int) -> int:
+    """The largest block <= target that divides n (the per-shard sequence
+    slices the ring variant dispatches are arbitrary divisors of L, so the
+    kernel's divisibility contract is met by shrinking the block)."""
+    b = min(target, n)
+    while n % b:
+        b -= 1
+    return b
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "interpret"))
 def _fa_impl(q, k, v, causal, block_q, block_k, interpret):
@@ -247,9 +259,14 @@ def _fa_impl(q, k, v, causal, block_q, block_k, interpret):
                                 block_k=block_k, interpret=interpret)
 
 
-def _fa_accepts(q, k, v, *, causal=True, block_q=None, block_k=None):
+def _fa_accepts(q, k, v, *, causal=True, mask=None, block_q=None,
+                block_k=None):
     """The kernel needs grouped heads and block-divisible sequence lengths
-    (blocks are clamped to the sequence, so short sequences always fit)."""
+    (blocks are clamped to the sequence, so short sequences always fit).
+    Masks are taken only when trivially dense (plain causal / no mask —
+    the kernel's native forms); richer specs go block-sparse or oracle."""
+    if mask is not None and not mask.trivial_dense:
+        return False
     lq, lk = q.shape[2], k.shape[2]
     bq = min(block_q or _FA_DEFAULTS["q"], lq)
     bk = min(block_k or _FA_DEFAULTS["k"], lk)
@@ -257,7 +274,9 @@ def _fa_accepts(q, k, v, *, causal=True, block_q=None, block_k=None):
 
 
 def _fa_kernel_variant(interpret):
-    def impl(q, k, v, *, causal=True, block_q=None, block_k=None):
+    def impl(q, k, v, *, causal=True, mask=None, block_q=None, block_k=None):
+        if mask is not None:      # trivially dense: lower to the causal flag
+            causal = mask.causal
         if block_q is not None and block_k is not None:   # fully pinned
             return _fa_impl(q, k, v, causal, block_q, block_k, interpret)
         dims = {"b": q.shape[0], "h": q.shape[1], "lq": q.shape[2],
@@ -287,12 +306,83 @@ registry.register("flash_attention", "interpret", _fa_kernel_variant(True),
                   plane="interpret", cost=Cost.INTERPRET, accepts=_fa_accepts)
 
 
+# -- block-sparse: the tile-skipping kernel over a compiled mask layout ----
+
+def _bs_blocks(lq, lk, block_q, block_k):
+    return (_fit_block(lq, block_q or _FA_DEFAULTS["q"]),
+            _fit_block(lk, block_k or _FA_DEFAULTS["k"]))
+
+
+@functools.lru_cache(maxsize=None)
+def _bs_exec(mask, lq, lk, bq, bk, interpret):
+    """One jitted executable per (spec, shape, blocks, plane); the compiled
+    TileLayout arrays ride along as constants, like the FFT twiddles."""
+    layout = compile_layout(mask, lq, lk, bq, bk)
+
+    def run(q, k, v):
+        return fa_k.flash_attention_tiles(q, k, v, layout,
+                                          interpret=interpret)
+    return jax.jit(run)
+
+
+def _bs_accepts(q, k, v, *, causal=True, mask=None, block_q=None,
+                block_k=None):
+    """Tile density drives the dense ↔ block-sparse crossover (DESIGN.md
+    §12): masks a dense kernel expresses natively (plain causal) take the
+    tile-skipping path only under ``BLOCKSPARSE_MAX_DENSITY``; masks it
+    cannot (windows, globals, block patterns) always do — the oracle is
+    the only other formulation that understands them."""
+    if mask is None or q.shape[1] % k.shape[1] != 0:
+        return False
+    lq, lk = q.shape[2], k.shape[2]
+    bq, bk = _bs_blocks(lq, lk, block_q, block_k)
+    try:
+        layout = compile_layout(mask, lq, lk, bq, bk)
+    except ValueError:        # e.g. a block pattern that doesn't cover (lq, lk)
+        return False
+    if mask.trivial_dense:
+        return layout.density <= BLOCKSPARSE_MAX_DENSITY
+    return True
+
+
+def _bs_kernel_variant(interpret):
+    def impl(q, k, v, *, causal=True, mask=None, block_q=None, block_k=None):
+        lq, lk = q.shape[2], k.shape[2]
+        bq, bk = _bs_blocks(lq, lk, block_q, block_k)
+        return _bs_exec(mask, lq, lk, bq, bk, interpret)(q, k, v)
+    return impl
+
+
+registry.register(
+    "flash_attention", "blocksparse", _bs_kernel_variant(False),
+    plane="pallas", cost=Cost.BLOCKSPARSE, accepts=_bs_accepts,
+    doc="tile-skipping flash over a compiled mask layout: per-Q-row live "
+        "tiles only, BSR traversal (kernels/flash_attention.py §tiles)")
+registry.register(
+    "flash_attention", "blocksparse_interpret", _bs_kernel_variant(True),
+    plane="interpret", cost=Cost.INTERPRET, accepts=_bs_accepts)
+
+
 _attn_ref_jit = jax.jit(ref.attention_ref, static_argnames=("causal",))
+_attn_masked_ref_jit = jax.jit(ref.attention_masked_ref)
+
+
+@functools.lru_cache(maxsize=None)
+def _dense_mask_arr(mask, lq, lk):
+    # host numpy, never a device array: caching a jnp constant created
+    # under a jit trace would leak that trace's tracer into later callers
+    return dense_mask(mask, lq, lk)
 
 
 @registry.register("flash_attention", "xla", plane="xla", cost=Cost.XLA,
-                   doc="materialising oracle (short sequences)")
-def _attn_xla(q, k, v, *, causal=True, block_q=None, block_k=None):
+                   doc="materialising oracle (short sequences; any mask)")
+def _attn_xla(q, k, v, *, causal=True, mask=None, block_q=None, block_k=None):
+    if mask is not None:
+        if mask.trivial_dense:
+            return _attn_ref_jit(q, k, v, causal=mask.causal)
+        return _attn_masked_ref_jit(q, k, v,
+                                    _dense_mask_arr(mask, q.shape[2],
+                                                    k.shape[2]))
     return _attn_ref_jit(q, k, v, causal=causal)
 
 
@@ -301,10 +391,13 @@ def _attn_chunked_jit(q, k, v, causal, block_kv):
     return ref.attention_chunked(q, k, v, causal=causal, block_kv=block_kv)
 
 
-def _chunked_accepts(q, k, v, *, causal=True, block_q=None, block_k=None):
+def _chunked_accepts(q, k, v, *, causal=True, mask=None, block_q=None,
+                     block_k=None):
     # long sequences: stream over KV blocks (flash schedule at the XLA
     # level) instead of materialising (B, H, Lq, Lk) scores — §Perf
     # iteration 2; short sequences keep the transparent oracle
+    if mask is not None and not mask.trivial_dense:
+        return False
     return k.shape[2] >= 4096 and k.shape[2] % 1024 == 0
 
 
@@ -312,28 +405,29 @@ def _chunked_accepts(q, k, v, *, causal=True, block_q=None, block_k=None):
                    cost=Cost.XLA_CHUNKED,
                    accepts=_chunked_accepts,
                    doc="KV-streamed flash schedule at the XLA level")
-def _attn_xla_chunked(q, k, v, *, causal=True, block_q=None, block_k=None):
+def _attn_xla_chunked(q, k, v, *, causal=True, mask=None, block_q=None,
+                      block_k=None):
+    if mask is not None:      # trivially dense (accepts gates the rest)
+        causal = mask.causal
     return _attn_chunked_jit(q, k, v, causal, 1024)
 
 
-def flash_attention(q, k, v, *, causal=True, block_q=None, block_k=None):
+def flash_attention(q, k, v, *, causal=True, mask=None, block_q=None,
+                    block_k=None):
+    """Registry-dispatched attention.  ``mask`` is an optional
+    :class:`repro.sparse.maskcompiler.MaskSpec`; when given it fully
+    specifies the masking and ``causal`` is ignored (write
+    ``MaskSpec(causal=True, window=w)``, not ``causal=True`` plus a window
+    spec).  Density-gated selection picks the tile-skipping block-sparse
+    kernel or the dense grid per call (DESIGN.md §12)."""
     return registry.dispatch("flash_attention", q, k, v, causal=causal,
-                             block_q=block_q, block_k=block_k)
+                             mask=mask, block_q=block_q, block_k=block_k)
 
 
 # ---------------------------------------------------------------------------
 # flash attention with state: (o, m, l) — the per-hop contract of the
 # sequence-parallel ring variant (repro.distributed.attention, DESIGN.md §10)
 # ---------------------------------------------------------------------------
-
-def _fit_block(n: int, target: int) -> int:
-    """The largest block <= target that divides n (the per-shard sequence
-    slices the ring variant dispatches are arbitrary divisors of L, so the
-    kernel's divisibility contract is met by shrinking the block)."""
-    b = min(target, n)
-    while n % b:
-        b -= 1
-    return b
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",

@@ -12,7 +12,7 @@ from repro.kernels.flash_attention import NEG_INF
 
 __all__ = ["matmul_ref", "spmv_ell_ref", "spmv_dia_ref", "spmm_ell_ref",
            "spmm_bsr_ref", "fft_stage_ref", "fft_ref", "attention_ref",
-           "attention_state_ref", "attention_chunked"]
+           "attention_state_ref", "attention_masked_ref", "attention_chunked"]
 
 
 def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
@@ -103,6 +103,31 @@ def attention_state_ref(q, k, v, *, causal: bool = True, scale=None
     out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
     out = out / jnp.maximum(l, 1e-30)[..., None]
     return out.astype(q.dtype), m, l
+
+
+def attention_masked_ref(q, k, v, mask, *, scale=None) -> jax.Array:
+    """GQA attention under an arbitrary bool mask (lq, lk), True = attend —
+    the oracle of the block-sparse tile-skipping kernel (DESIGN.md §12).
+
+    Fully-masked rows output exactly 0, matching the kernel (which never
+    launches their tiles, leaving l = 0)."""
+    b, hq, lq, d = q.shape
+    _, hk, lk, _ = k.shape
+    group = hq // hk
+    kk = jnp.repeat(k, group, axis=1) if group > 1 else k
+    vv = jnp.repeat(v, group, axis=1) if group > 1 else v
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    # dead rows: m == s == NEG_INF gives exp(0) = 1 per entry; zero them so
+    # the row sums to l = 0 and the output is 0, like the skipped tiles
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return (out / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
 
 
 def attention_chunked(q, k, v, *, causal: bool = True, scale=None,

@@ -88,8 +88,12 @@ def attention_apply_kv(x: jax.Array, p: Params, cfg, cos, sin
     q, k = _rope_qk(q, k, cos, sin, cfg)
     v = v.transpose(0, 2, 1, 3)
     # registry-dispatched: ring over the ambient mesh at O3/O4, flash
-    # kernel on one TPU chip, chunked/oracle XLA elsewhere
-    out = dispatch("flash_attention", q, k, v, causal=True)  # (B, H, L, D)
+    # kernel on one TPU chip, chunked/oracle XLA elsewhere; sparse-attention
+    # configs (attn_window / attn_global_tokens) carry a MaskSpec, which
+    # density-gated selection lowers to the tile-skipping kernel (§12)
+    mask = cfg.attn_mask_spec() if hasattr(cfg, "attn_mask_spec") else None
+    out = dispatch("flash_attention", q, k, v, causal=True,
+                   mask=mask)                                # (B, H, L, D)
     out = out.transpose(0, 2, 1, 3).reshape(B, L, cfg.num_heads * cfg.head_dim)
     return linear(out, p["wo"].astype(x.dtype)), k, v
 
@@ -121,6 +125,13 @@ def attention_decode(
     s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
                    cache_k.astype(jnp.float32)) * (hd ** -0.5)
     mask = jnp.arange(S) <= cur_len                       # include current token
+    if getattr(cfg, "attn_window", 0):
+        # same semantics as MaskSpec(causal=True, window=w): the w most
+        # recent keys (kpos > qpos - w); global-token keys stay visible
+        recent = jnp.arange(S) > cur_len - cfg.attn_window
+        if cfg.attn_global_tokens:
+            recent = recent.at[jnp.asarray(cfg.attn_global_tokens)].set(True)
+        mask = mask & recent
     s = jnp.where(mask[None, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bksd->bkgd", w, cache_v.astype(jnp.float32))

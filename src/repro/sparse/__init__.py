@@ -14,8 +14,11 @@ O3/O4 mesh the same two lines run row-sharded on the collectives plane.
 """
 from repro.sparse.formats import (BSR, CSR, DIA, ELL, bsr_from_csr,
                                   bsr_from_dense, csr_from_bsr)
-from repro.sparse.selector import (FORMATS, autotune_block, format_of,
-                                   matrix, select_format)
+from repro.sparse.maskcompiler import (MaskSpec, TileLayout, causal_layout,
+                                       compile_layout, dense_mask)
+from repro.sparse.selector import (BLOCKSPARSE_MAX_DENSITY, FORMATS,
+                                   autotune_block, format_of, matrix,
+                                   select_format)
 from repro.sparse.spmm import spmm
 from repro.sparse.stats import SparseStats, sparse_stats
 
@@ -24,5 +27,7 @@ __all__ = [
     "bsr_from_dense", "bsr_from_csr", "csr_from_bsr",
     "SparseStats", "sparse_stats",
     "FORMATS", "select_format", "autotune_block", "matrix", "format_of",
+    "BLOCKSPARSE_MAX_DENSITY",
+    "MaskSpec", "TileLayout", "dense_mask", "compile_layout", "causal_layout",
     "spmm",
 ]

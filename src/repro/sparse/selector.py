@@ -43,14 +43,24 @@ from repro.numerics.sparse import CSR, DIA, ELL, csr_from_dense, \
 from repro.sparse.formats import BSR, bsr_from_dense
 from repro.sparse.stats import DEFAULT_BLOCK, SparseStats, sparse_stats
 
-__all__ = ["FORMATS", "BLOCK_CANDIDATES", "select_format", "autotune_block",
-           "matrix", "format_of"]
+__all__ = ["FORMATS", "BLOCK_CANDIDATES", "BLOCKSPARSE_MAX_DENSITY",
+           "select_format", "autotune_block", "matrix", "format_of"]
 
 #: Auto-selectable formats, strongest-kernel-first (the selector's ranking).
 FORMATS = ("dia", "bsr", "ell", "csr")
 
 #: Minimum storage efficiency for a specialised format to beat CSR.
 MIN_FILL = 0.5
+
+#: Maximum live-tile density at which the block-sparse flash attention
+#: kernel beats the dense flash grid for *densely-expressible* masks
+#: (plain causal / no mask) — the attention-plane dual of MIN_FILL, read
+#: by ``flash_attention/'blocksparse'``'s accepts() (DESIGN.md §12).
+#: A static prior only: when the PR 6 cost model holds measured seconds
+#: for a shape class, the observed crossover outranks it.  Masks a dense
+#: kernel cannot express natively (windows, global tokens, block patterns)
+#: always take the block-sparse path regardless of density.
+BLOCKSPARSE_MAX_DENSITY = 0.5
 
 #: DIA unrolls one shifted FMA per diagonal at trace time; cap the program.
 MAX_DIAGS = 512
