@@ -46,7 +46,7 @@ def main(argv=None) -> int:
                     help="the paper's full input sweeps (slower)")
     ap.add_argument("--only", "--suite", default=None,
                     choices=["mod2am", "mod2as", "mod2f", "cg", "spmm",
-                             "attention", "roofline"])
+                             "attention", "serve", "roofline"])
     ap.add_argument("--backend-sweep", action="store_true",
                     help="benchmark every registered registry variant per op "
                          "and print a per-variant comparison table")
@@ -167,7 +167,7 @@ def main(argv=None) -> int:
         return 1 if entry["status"] == "error" else 0
 
     from benchmarks import (mod2am, mod2as, mod2f, cg, spmm, attention,
-                            roofline_table)
+                            serve, roofline_table)
 
     suites = {
         "mod2am": lambda: mod2am.main(args.full),
@@ -176,6 +176,7 @@ def main(argv=None) -> int:
         "cg": lambda: cg.main(args.full),
         "spmm": lambda: spmm.main(args.full),
         "attention": lambda: attention.main(args.full),
+        "serve": lambda: serve.main(args.full),
         "roofline": lambda: _roofline(roofline_table),
     }
     if args.only:

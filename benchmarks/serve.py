@@ -1,0 +1,253 @@
+"""Serve suite — continuous batching vs the fixed-slot engine under load
+(DESIGN.md §13).
+
+The paper's throughput argument is about keeping the machine busy: the
+same retargetable program, but the schedule decides how much of peak you
+see.  At the serving tier the schedule *is* the batching policy, so this
+suite A/Bs the two engines on one mixed workload — R requests over
+``SLOTS`` decode slots, varied prompt lengths with **one long prompt**
+(4x the base) and varied per-request token budgets:
+
+    fixed       ``Engine``: requests run in admission-order waves of
+                ``SLOTS``; every wave pads prompts to the wave max and
+                decodes to the wave's largest ``max_new`` (the engine's
+                fixed-slot contract).  Only each request's *own* budget
+                counts as useful output.
+    continuous  ``ContinuousEngine``: paged cache, admission queue,
+                chunked prefill interleaved with decode, slots recycle
+                device-side the moment a stream finishes.
+
+The headline number is useful-tokens/s with the occupancy column
+explaining it: the fixed engine's occupancy decays as short streams
+finish inside a wave, the continuous engine's stays pinned near 1.
+
+Two satellite sweeps ride along:
+
+* **offered-QPS sweep** — the same workload submitted at increasing
+  arrival rates; rows record aggregate tokens/s, p50/p99 per-token
+  latency, p99 time-to-first-token, and mean occupancy.
+* **chunked-prefill A/B** — a long prompt admitted while short streams
+  decode, served once with chunked prefill and once with the whole
+  prompt as a single monolithic chunk.  The long prefill stalls every
+  in-flight stream for its full duration, so the p99 per-token latency
+  is the cost of *not* chunking; chunking bounds it at one chunk's work.
+
+Absolute numbers on the CPU container are synthetic (tiny model, host
+loop overhead); the artefact is the fixed-vs-continuous ratio and the
+latency-bounding shape, which carry to real hardware where the per-step
+compute dwarfs the host loop.
+
+    PYTHONPATH=src python -m benchmarks.run --only serve
+    PYTHONPATH=src python -m benchmarks.run --only serve --json-out s.json
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import print_table
+
+#: decode slots in both engines — the concurrency the A/B is defined at.
+SLOTS = 8
+
+
+def _workload(full: bool):
+    """R requests: varied prompts, one 4x-long prompt, varied budgets."""
+    base, rep = (32, 4) if full else (16, 4)
+    R = SLOTS * rep
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(R):
+        plen = int(rng.integers(base // 2, base + 1))
+        if i == 1:                      # one long prompt, first wave
+            plen = base * 4
+        # serving-trace shape: mostly short answers plus one heavy-tail
+        # request per wave of SLOTS — the fixed engine decodes every wave
+        # to its longest budget, the continuous engine recycles each short
+        # stream's slot immediately and overlaps the long streams
+        if i % SLOTS == SLOTS // 2:
+            max_new = int(rng.integers(96, 129))
+        else:
+            max_new = int(rng.integers(4, 13))
+        prompt = rng.integers(0, 256, size=plen).astype(np.int32)
+        reqs.append((prompt, max_new))
+    return reqs
+
+
+def _build(full: bool):
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.models.lm import LM
+
+    # big enough that one decode step's device compute dwarfs the host
+    # loop (the regime the A/B speaks to); small enough for CI
+    cfg = ModelConfig(name="serve-bench", family="dense",
+                      num_layers=6 if full else 4,
+                      d_model=512 if full else 256, vocab_size=256,
+                      num_heads=4, num_kv_heads=2, head_dim=32,
+                      d_ff=1024 if full else 512, dtype="float32",
+                      param_dtype="float32", remat=False,
+                      serve_page_size=16)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    return lm, params
+
+
+def _slot_capacity(reqs) -> int:
+    return max(len(p) + m for p, m in reqs)
+
+
+def fixed_slot_run(lm, params, reqs) -> dict:
+    """Admission-order waves of SLOTS through the fixed engine."""
+    import jax.numpy as jnp
+
+    from repro.serve import Engine, SamplingParams
+
+    cap = _slot_capacity(reqs)
+    eng = Engine(lm, params, max_len=cap,
+                 sampling=SamplingParams(greedy=True))
+    # warm the jit caches outside the timed region (both engines pay one
+    # trace per shape; the A/B is about steady-state schedule, not tracing)
+    waves = [reqs[i:i + SLOTS] for i in range(0, len(reqs), SLOTS)]
+    shapes = {(max(len(p) for p, _ in w), max(m for _, m in w))
+              for w in waves}
+    for plen, mnew in shapes:
+        warm = jnp.zeros((SLOTS, plen), jnp.int32)
+        eng.generate(warm, max_new_tokens=mnew)
+
+    useful = 0
+    occ = []
+    t0 = time.monotonic()
+    for wave in waves:
+        plen = max(len(p) for p, _ in wave)
+        mnew = max(m for _, m in wave)
+        batch = np.zeros((SLOTS, plen), np.int32)
+        for s, (p, _) in enumerate(wave):
+            batch[s, plen - len(p):] = p        # left-pad to the wave max
+        eng.generate(jnp.asarray(batch), max_new_tokens=mnew)
+        useful += sum(m for _, m in wave)
+        # slot s is useful only for its own budget: per-step occupancy
+        # averaged over the wave's mnew decode steps
+        occ.extend(sum(m > step for _, m in wave) / SLOTS
+                   for step in range(mnew))
+    dt = time.monotonic() - t0
+    return {"mode": "fixed", "slots": SLOTS, "requests": len(reqs),
+            "useful_tokens": useful, "seconds": round(dt, 4),
+            "tokens_per_s": round(useful / dt, 1),
+            "occupancy": round(float(np.mean(occ)), 3)}
+
+
+def continuous_run(lm, params, reqs, *, chunk: int = 16) -> dict:
+    from repro.serve import ContinuousEngine, SamplingParams
+
+    eng = ContinuousEngine(lm, params, num_slots=SLOTS,
+                           max_len=_slot_capacity(reqs), chunk_size=chunk,
+                           sampling=SamplingParams(greedy=True))
+    eng.serve(reqs[:SLOTS])             # warm traces outside the timed region
+    t0 = time.monotonic()
+    outs, stats = eng.serve(reqs, collect_stats=True)
+    dt = time.monotonic() - t0
+    useful = int(sum(len(o) for o in outs))
+    occ = [o for o in stats.occupancy if o > 0]
+    return {"mode": "continuous", "slots": SLOTS, "requests": len(reqs),
+            "useful_tokens": useful, "seconds": round(dt, 4),
+            "tokens_per_s": round(useful / dt, 1),
+            "occupancy": round(float(np.mean(occ)), 3)}
+
+
+def qps_sweep(lm, params, reqs, rates) -> list[dict]:
+    """The continuous engine under offered load: arrivals at ``qps``."""
+    from repro.serve import ContinuousEngine, SamplingParams
+
+    eng = ContinuousEngine(lm, params, num_slots=SLOTS,
+                           max_len=_slot_capacity(reqs), chunk_size=16,
+                           sampling=SamplingParams(greedy=True))
+    eng.serve(reqs[:SLOTS])             # warm
+    rows = []
+    for qps in rates:
+        arrival = [i / qps for i in range(len(reqs))]
+        t0 = time.monotonic()
+        outs, stats = eng.serve(reqs, arrival=arrival, collect_stats=True)
+        dt = time.monotonic() - t0
+        useful = int(sum(len(o) for o in outs))
+        lat = np.asarray(stats.token_latencies)
+        ttft = np.asarray(stats.first_token_times)
+        occ = [o for o in stats.occupancy if o > 0]
+        rows.append({
+            "mode": "qps", "qps": qps, "requests": len(reqs),
+            "useful_tokens": useful, "seconds": round(dt, 4),
+            "tokens_per_s": round(useful / dt, 1),
+            "p50_token_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "p99_token_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+            "p99_ttft_ms": round(float(np.percentile(ttft, 99)) * 1e3, 3),
+            "occupancy": round(float(np.mean(occ)), 3),
+        })
+    return rows
+
+
+def prefill_ab(lm, params, full: bool) -> list[dict]:
+    """Chunked vs monolithic prefill: p99 per-token latency of in-flight
+    streams while one long prompt is admitted."""
+    from repro.serve import ContinuousEngine, SamplingParams
+
+    base = 24 if full else 12
+    long_len = base * 4
+    rng = np.random.default_rng(1)
+    shorts = [(rng.integers(0, 256, size=base).astype(np.int32), 24)
+              for _ in range(SLOTS - 1)]
+    long_req = (rng.integers(0, 256, size=long_len).astype(np.int32), 8)
+    reqs = shorts + [long_req]          # long admits while shorts decode
+
+    rows = []
+    for label, chunk in (("chunked", 16), ("monolithic", long_len)):
+        eng = ContinuousEngine(lm, params, num_slots=SLOTS,
+                               max_len=_slot_capacity(reqs),
+                               chunk_size=chunk,
+                               sampling=SamplingParams(greedy=True))
+        eng.serve(reqs)                 # warm
+        t0 = time.monotonic()
+        outs, stats = eng.serve(reqs, collect_stats=True)
+        dt = time.monotonic() - t0
+        lat = np.asarray(stats.token_latencies)
+        rows.append({
+            "mode": f"prefill_{label}", "chunk": chunk,
+            "long_prompt": long_len, "seconds": round(dt, 4),
+            "tokens_per_s": round(sum(len(o) for o in outs) / dt, 1),
+            "p50_token_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "p99_token_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+        })
+    return rows
+
+
+def main(full: bool = False) -> list[dict]:
+    lm, params = _build(full)
+    reqs = _workload(full)
+
+    fixed = fixed_slot_run(lm, params, reqs)
+    cont = continuous_run(lm, params, reqs)
+    cont["speedup_vs_fixed"] = round(
+        cont["tokens_per_s"] / fixed["tokens_per_s"], 3)
+    rows = [fixed, cont]
+    print_table(
+        f"serve A/B ({len(reqs)} requests over {SLOTS} slots, one "
+        f"{'4x' } long prompt, varied budgets; useful-tokens/s)", rows,
+        ["mode", "requests", "useful_tokens", "seconds", "tokens_per_s",
+         "occupancy", "speedup_vs_fixed"])
+
+    qps = qps_sweep(lm, params, reqs, (16, 64, 256) if full else (32, 256))
+    print_table("serve offered-QPS sweep (continuous engine)", qps,
+                ["qps", "useful_tokens", "seconds", "tokens_per_s",
+                 "p50_token_ms", "p99_token_ms", "p99_ttft_ms", "occupancy"])
+
+    ab = prefill_ab(lm, params, full)
+    print_table("serve chunked-prefill A/B (long prompt admitted under "
+                "in-flight decode)", ab,
+                ["mode", "chunk", "long_prompt", "seconds", "tokens_per_s",
+                 "p50_token_ms", "p99_token_ms"])
+    return rows + qps + ab
+
+
+if __name__ == "__main__":
+    main()

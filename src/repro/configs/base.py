@@ -80,6 +80,11 @@ class ModelConfig:
     scan_layers: bool = True
     logit_softcap: float = 0.0
 
+    # continuous-batching serve tier (DESIGN.md §13): KV-cache page size
+    # (tokens per page) and the scheduler's admission-queue depth
+    serve_page_size: int = 64
+    serve_queue_depth: int = 64
+
     # ------------------------------------------------------------------
     def attn_mask_spec(self):
         """The declarative attention mask of this architecture — a

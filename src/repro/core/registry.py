@@ -132,6 +132,8 @@ _PROVIDERS = {
     "fft": ("repro.kernels.ops", "repro.distributed.numerics"),
     "flash_attention": ("repro.kernels.ops", "repro.distributed.attention"),
     "flash_attention_state": ("repro.kernels.ops",),
+    "paged_attention": ("repro.kernels.ops", "repro.distributed.attention"),
+    "chunk_attention": ("repro.kernels.ops",),
     "solver_spmv": ("repro.numerics.spmv", "repro.distributed.numerics",
                     "repro.sparse.spmm"),
     "spmm": ("repro.sparse.spmm", "repro.distributed.numerics"),

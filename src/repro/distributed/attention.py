@@ -64,7 +64,7 @@ from repro.core import registry
 from repro.distributed.collectives import (RingPlan, ambient_ring_plan,
                                            ring_plan)
 
-__all__ = ["ring_attention", "zigzag_perm"]
+__all__ = ["ring_attention", "paged_ring_attention", "zigzag_perm"]
 
 
 @functools.lru_cache(maxsize=None)
@@ -296,3 +296,103 @@ registry.register(
     doc="sequence-parallel ring attention: Q/K/V shard L over pod x data, "
         "K/V panels rotate by ppermute, per-shard flash state merges "
         "across hops; zig-zag causal balancing")
+
+
+# ---------------------------------------------------------------------------
+# paged decode over the ring-sharded KV cache (DESIGN.md §13)
+#
+# Prefill rotates K/V panels around the ring (§10); decode inverts the
+# movement: the paged pool stays pinned — page table position p is owned by
+# ring shard p % W, shard r holding global page ids [r·P/W, (r+1)·P/W) —
+# and only the one-token (o, m, l) partials travel, merged in a single
+# pmax/psum step (the rotation schedule's reduction dual,
+# RingPlan.psum/pmax).  Striped ownership keeps the pool balanced: a slot's
+# pages deal out round-robin, so a long stream loads every shard equally
+# instead of saturating one shard's range.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _paged_ring_exec(plan: RingPlan, plane: str):
+    entry = plan.spec_entry()
+    W = plan.size
+
+    def run(q, kp, vp, table, lens):
+        # q (B, H, 1, d) / table (B, n) / lens (B,) replicated;
+        # kp/vp (P/W, hk, ps, d) — this shard's slice of the page pool
+        r = plan.ring_index()
+        p_local = kp.shape[0]
+        b, n = table.shape
+        ps = kp.shape[2]
+        nloc = n // W
+
+        # this shard's table positions (p % W == r), in ascending global
+        # position order; trash-0 / foreign entries clip into range and are
+        # masked off by llen below
+        tl = table.reshape(b, nloc, W)
+        mine = jax.lax.dynamic_index_in_dim(tl, r, axis=2, keepdims=False)
+        local = jnp.clip(mine - r * p_local, 0, p_local - 1)   # (b, nloc)
+
+        # valid tokens in this shard's view: global position j·W + r holds
+        # tokens [pos·ps, pos·ps + ps); allocation fills positions in
+        # order, so full pages precede the one partial page and the local
+        # view is prefix-valid with length Σ fill_j
+        pstart = (jnp.arange(nloc) * W + r) * ps               # (nloc,)
+        fill = jnp.clip(lens[:, None] - pstart[None, :], 0, ps)
+        llen = jnp.sum(fill, axis=1).astype(jnp.int32)         # (b,)
+
+        kg = kp[local]                         # (b, nloc, hk, ps, d)
+        vg = vp[local]
+        hk, d = kp.shape[1], kp.shape[3]
+        kg = kg.transpose(0, 2, 1, 3, 4).reshape(b, hk, nloc * ps, d)
+        vg = vg.transpose(0, 2, 1, 3, 4).reshape(b, hk, nloc * ps, d)
+
+        o, m, l = registry.dispatch("flash_attention_state", q, kg, vg,
+                                    causal=False, kv_len=llen, variant=plane)
+        # decode-side state merge: a shard with no live key carries
+        # m == NEG_INF and its weight exp(m - mg) underflows to exactly 0
+        mg = plan.pmax(m)
+        w = jnp.exp(m - mg) * l
+        lg = plan.psum(w)
+        og = plan.psum(o.astype(jnp.float32) * w[..., None])
+        out = og / jnp.maximum(lg, 1e-30)[..., None]
+        return out.astype(q.dtype)
+
+    rep = P(None, None, None, None)
+    return jax.jit(shard_map(
+        run, mesh=plan.mesh,
+        in_specs=(rep, P(entry, None, None, None),
+                  P(entry, None, None, None), P(None, None), P(None)),
+        out_specs=rep, check_rep=False))
+
+
+def paged_ring_attention(q, kpages, vpages, table, lens):
+    """Decode attention over the ring-sharded page pool: per-shard
+    prefix-masked flash partials merged via the ring plan's pmax/psum dual.
+    Numerically allclose (not bitwise) to the chip gather variant — the
+    psum reassociates the (o·w, w) sums across shards."""
+    plan = ambient_ring_plan()
+    if plan is None:
+        raise RuntimeError(
+            "paged ring attention invoked without an ambient O3/O4 mesh "
+            "carrying a batch-role (pod/data) axis; enter use_level(O3) "
+            "first")
+    plane = registry.resolve_backend()
+    return _paged_ring_exec(plan, plane)(q, kpages, vpages, table, lens)
+
+
+def _paged_ring_accepts(q, kpages, vpages, table, lens):
+    plan = ambient_ring_plan()
+    if plan is None or plan.size <= 1:
+        return False
+    W = plan.size
+    return (kpages.shape[0] % W == 0 and table.shape[1] % W == 0
+            and q.shape[1] % kpages.shape[1] == 0)
+
+
+registry.register(
+    "paged_attention", "ring", paged_ring_attention, scope="mesh", cost=1.0,
+    available=_ring_available, accepts=_paged_ring_accepts,
+    doc="decode over the ring-sharded page pool: striped page ownership, "
+        "per-shard prefix-masked flash state, pmax/psum merge (the "
+        "rotation schedule's reduction dual, DESIGN.md §13)")

@@ -257,6 +257,21 @@ class RingPlan:
         sizes = tuple(self.topo.size(a) for a in self.axes)
         return flat_index(self.axes, sizes)
 
+    def psum(self, x):
+        """All-reduce ``x`` over the ring participants — the rotation
+        schedule's reduction dual: where prefill *rotates* K/V panels and
+        each shard folds hops locally (§10), paged decode keeps pages
+        pinned and *reduces* the per-shard (o·w, w) partials in one step
+        (DESIGN.md §13)."""
+        axis = self.axes if len(self.axes) > 1 else self.axes[0]
+        return jax.lax.psum(x, axis)
+
+    def pmax(self, x):
+        """All-max over the ring participants — the softmax row-max half of
+        the decode-side state merge (pairs with :meth:`psum`)."""
+        axis = self.axes if len(self.axes) > 1 else self.axes[0]
+        return jax.lax.pmax(x, axis)
+
 
 def ring_plan(mesh, topo: Optional[MeshTopology] = None) -> RingPlan:
     """Build the :class:`RingPlan` for ``mesh`` from its axis roles.

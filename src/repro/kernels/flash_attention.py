@@ -62,8 +62,10 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import compat
 
 __all__ = ["flash_attention_kernel", "flash_attention_state_kernel",
+           "flash_attention_lens_kernel", "flash_attention_lens_state_kernel",
            "flash_attention_tiles_kernel", "flash_attention_tiles_state_kernel",
-           "flash_attention", "flash_attention_tiles", "NEG_INF"]
+           "flash_attention", "flash_attention_tiles", "merge_states",
+           "NEG_INF"]
 
 #: The additive mask value (finite, so exp() underflows to 0 instead of
 #: producing inf - inf = nan) — shared by every attention formulation:
@@ -72,13 +74,44 @@ __all__ = ["flash_attention_kernel", "flash_attention_state_kernel",
 NEG_INF = -1e30
 
 
+def merge_states(a, b):
+    """Merge two online-softmax states ``(o, m, l)`` over the same queries.
+
+    This is the kernel's K-panel recurrence lifted to whole states: two
+    attention calls over disjoint key sets combine exactly like two K panels
+    inside :func:`_fa_step`.  The distributed ring merge
+    (``repro.distributed.attention._merge``) and the chunked-prefill merge
+    (``chunk_attention`` in kernels/ops.py, DESIGN.md §13) are both this
+    function; a state whose keys were all masked carries ``m == NEG_INF``
+    and its weight ``exp(NEG_INF - m)`` underflows to exactly 0, so it
+    drops out of the merge.
+    """
+    o_a, m_a, l_a = a
+    o_b, m_b, l_b = b
+    m = jnp.maximum(m_a, m_b)
+    w_a = jnp.exp(m_a - m) * l_a
+    w_b = jnp.exp(m_b - m) * l_b
+    l = w_a + w_b
+    o = (o_a.astype(jnp.float32) * w_a[..., None]
+         + o_b.astype(jnp.float32) * w_b[..., None])
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o.astype(o_a.dtype), m, l
+
+
 def _fa_step(
     q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
     *, scale: float, causal: bool, block_q: int, block_k: int,
+    lens_ref=None,
 ):
     """One grid step of the online-softmax recurrence: init the (m, l, acc)
     scratch on the first K panel, then fold this panel in (shared by the
-    plain and the state-returning kernels)."""
+    plain and the state-returning kernels).
+
+    ``lens_ref`` (a (1,) int32 block indexed by batch) is the paged-decode
+    prefix mask (DESIGN.md §13): keys at ``kpos >= lens_ref[0]`` are dead.
+    A row with *no* live key anywhere leaves ``m == NEG_INF`` — its (o, m,
+    l) is garbage, but the ring/state merge weights it by ``exp(m - m_g)``
+    which underflows to exactly 0, so empty shards/slots cancel."""
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -103,6 +136,10 @@ def _fa_step(
             kpos = ik * block_k + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 1)
             s = jnp.where(qpos >= kpos, s, NEG_INF)
+        if lens_ref is not None:
+            kpos = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos < lens_ref[0], s, NEG_INF)
 
         m_prev = m_ref[...]
         m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
@@ -134,6 +171,42 @@ def flash_attention_state_kernel(
     """Same recurrence; the flush also emits the final (m, l) state."""
     _fa_step(q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, scale=scale,
              causal=causal, block_q=block_q, block_k=block_k)
+
+    @pl.when(pl.program_id(3) == kv_steps - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+        ms_ref[0, 0] = m_ref[...]
+        ls_ref[0, 0] = l_ref[...]
+
+
+def flash_attention_lens_kernel(
+    q_ref, k_ref, v_ref, lens_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, kv_steps: int, block_q: int, block_k: int,
+):
+    """Dense-grid kernel with a per-batch key-prefix mask (``lens_ref``):
+    only keys at positions ``< lens_ref[0]`` are live.  This is the paged
+    decode / chunked-prefill read path (DESIGN.md §13), where the K/V
+    operand is a gathered page view whose valid length varies per slot."""
+    _fa_step(q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, scale=scale,
+             causal=causal, block_q=block_q, block_k=block_k,
+             lens_ref=lens_ref)
+
+    @pl.when(pl.program_id(3) == kv_steps - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_lens_state_kernel(
+    q_ref, k_ref, v_ref, lens_ref, o_ref, ms_ref, ls_ref, m_ref, l_ref,
+    acc_ref,
+    *, scale: float, causal: bool, kv_steps: int, block_q: int, block_k: int,
+):
+    """Prefix-masked recurrence; the flush also emits the final (m, l)."""
+    _fa_step(q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, scale=scale,
+             causal=causal, block_q=block_q, block_k=block_k,
+             lens_ref=lens_ref)
 
     @pl.when(pl.program_id(3) == kv_steps - 1)
     def _flush():
@@ -315,6 +388,7 @@ def flash_attention(
     block_k: int = 128,
     return_state: bool = False,
     row_extents: bool = True,
+    kv_len: jax.Array | None = None,
     interpret: bool = False,
 ):
     """Flash attention; with ``return_state`` returns ``(o, m, l)`` where
@@ -325,7 +399,14 @@ def flash_attention(
     degenerate banded layout: the K grid is bounded per Q row by compiled
     row extents instead of launching every above-diagonal panel and
     ``pl.when``-ing it off.  ``row_extents=False`` restores the legacy
-    full-grid kernel (the A/B baseline for the parity benchmark)."""
+    full-grid kernel (the A/B baseline for the parity benchmark).
+
+    ``kv_len`` — optional (batch,) int32 per-batch valid key prefix: keys
+    at positions ``>= kv_len[b]`` are masked dead.  The paged serve tier
+    (DESIGN.md §13) attends over gathered page views padded to the pool
+    capacity; without the mask the zero-padding keys would contribute
+    ``exp(0 - m)`` terms to the denominator.  Composes with ``causal``
+    (prefix AND band); routes through the dense grid, not the tiles path."""
     batch, q_heads, seq_q, d = q.shape
     _, kv_heads, seq_k, _ = k.shape
     assert q_heads % kv_heads == 0
@@ -335,7 +416,7 @@ def flash_attention(
     assert seq_q % block_q == 0 and seq_k % block_k == 0
     scale = scale if scale is not None else d ** -0.5
 
-    if causal and row_extents:
+    if causal and row_extents and kv_len is None:
         from repro.sparse.maskcompiler import causal_layout
         return flash_attention_tiles(
             q, k, v, causal_layout(seq_q, seq_k, block_q, block_k),
@@ -343,11 +424,18 @@ def flash_attention(
 
     grid = (batch, q_heads, seq_q // block_q, seq_k // block_k)
 
-    kernel = functools.partial(
-        flash_attention_state_kernel if return_state
-        else flash_attention_kernel,
-        scale=scale, causal=causal,
-        kv_steps=grid[3], block_q=block_q, block_k=block_k)
+    if kv_len is not None:
+        kernel = functools.partial(
+            flash_attention_lens_state_kernel if return_state
+            else flash_attention_lens_kernel,
+            scale=scale, causal=causal,
+            kv_steps=grid[3], block_q=block_q, block_k=block_k)
+    else:
+        kernel = functools.partial(
+            flash_attention_state_kernel if return_state
+            else flash_attention_kernel,
+            scale=scale, causal=causal,
+            kv_steps=grid[3], block_q=block_q, block_k=block_k)
 
     o_spec = pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0))
     out_shape = jax.ShapeDtypeStruct(q.shape, q.dtype)
@@ -360,16 +448,22 @@ def flash_attention(
         out_shape = (out_shape, state_shape, state_shape)
         out_specs = (o_spec, state_spec, state_spec)
 
+    in_specs = [
+        o_spec,
+        pl.BlockSpec((1, 1, block_k, d),
+                     lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        pl.BlockSpec((1, 1, block_k, d),
+                     lambda b, h, iq, ik: (b, h // group, ik, 0)),
+    ]
+    operands = (q, k, v)
+    if kv_len is not None:
+        in_specs.append(pl.BlockSpec((1,), lambda b, h, iq, ik: (b,)))
+        operands = (q, k, v, kv_len.astype(jnp.int32))
+
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            o_spec,
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
@@ -382,4 +476,4 @@ def flash_attention(
                                  "arbitrary"),
         ),
         interpret=interpret,
-    )(q, k, v)
+    )(*operands)

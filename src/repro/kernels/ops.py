@@ -41,7 +41,8 @@ from repro.sparse.maskcompiler import compile_layout, dense_mask
 from repro.sparse.selector import BLOCKSPARSE_MAX_DENSITY
 
 __all__ = ["backend", "current_backend", "matmul", "spmv_ell", "spmv_dia",
-           "fft", "flash_attention", "flash_attention_state"]
+           "fft", "flash_attention", "flash_attention_state",
+           "paged_attention", "chunk_attention", "page_gather"]
 
 
 # ---------------------------------------------------------------------------
@@ -432,21 +433,23 @@ def flash_attention(q, k, v, *, causal=True, mask=None, block_q=None,
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "interpret"))
-def _fa_state_impl(q, k, v, causal, block_q, block_k, interpret):
+def _fa_state_impl(q, k, v, kv_len, causal, block_q, block_k, interpret):
     return fa_k.flash_attention(q, k, v, causal=causal, block_q=block_q,
                                 block_k=block_k, return_state=True,
-                                interpret=interpret)
+                                kv_len=kv_len, interpret=interpret)
 
 
 def _fa_state_kernel_variant(interpret):
-    def impl(q, k, v, *, causal=True, block_q=None, block_k=None):
+    def impl(q, k, v, *, causal=True, kv_len=None, block_q=None,
+             block_k=None):
         bq = _fit_block(q.shape[2], block_q or _FA_DEFAULTS["q"])
         bk = _fit_block(k.shape[2], block_k or _FA_DEFAULTS["k"])
-        return _fa_state_impl(q, k, v, causal, bq, bk, interpret)
+        return _fa_state_impl(q, k, v, kv_len, causal, bq, bk, interpret)
     return impl
 
 
-def _fa_state_accepts(q, k, v, *, causal=True, block_q=None, block_k=None):
+def _fa_state_accepts(q, k, v, *, causal=True, kv_len=None, block_q=None,
+                      block_k=None):
     return q.shape[1] % k.shape[1] == 0
 
 
@@ -467,13 +470,168 @@ _attn_state_ref_jit = jax.jit(ref.attention_state_ref,
 @registry.register("flash_attention_state", "xla", plane="xla", cost=Cost.XLA,
                    accepts=_fa_state_accepts,
                    doc="materialising oracle returning (o, m, l)")
-def _attn_state_xla(q, k, v, *, causal=True, block_q=None, block_k=None):
-    return _attn_state_ref_jit(q, k, v, causal=causal)
+def _attn_state_xla(q, k, v, *, causal=True, kv_len=None, block_q=None,
+                    block_k=None):
+    return _attn_state_ref_jit(q, k, v, causal=causal, kv_len=kv_len)
 
 
-def flash_attention_state(q, k, v, *, causal=True, block_q=None,
-                          block_k=None):
+def flash_attention_state(q, k, v, *, causal=True, kv_len=None, block_q=None,
+                          block_k=None, variant=None):
     """Attention that also returns the online-softmax (m, l) row state —
-    what the ring variant merges across K/V rotations."""
-    return registry.dispatch("flash_attention_state", q, k, v, causal=causal,
+    what the ring variant merges across K/V rotations.
+
+    ``kv_len`` — optional (batch,) int32 valid key prefix: keys at
+    positions ``>= kv_len[b]`` are masked dead (the serve tier's
+    gathered-page views are padded to pool capacity, DESIGN.md §13)."""
+    return registry.dispatch("flash_attention_state", q, k, v,
+                             variant=variant, causal=causal, kv_len=kv_len,
                              block_q=block_q, block_k=block_k)
+
+
+# ---------------------------------------------------------------------------
+# paged attention: one-token decode over the serve tier's paged KV cache
+# (DESIGN.md §13).  The chip variant gathers the slot's pages into a dense
+# per-slot view and prefix-masks the unfilled tail; the mesh variant
+# (repro.distributed.attention) computes per-shard (o, m, l) partials over
+# ring-sharded pages and merges them with the ring plan's psum dual.
+# ---------------------------------------------------------------------------
+
+
+def page_gather(pages, table):
+    """Gather a paged pool into dense per-slot K/V views.
+
+    ``pages`` (P, kv_heads, page_size, d) + ``table`` (B, n) of global page
+    ids -> (B, kv_heads, n * page_size, d) in table-position order.  Unused
+    table entries point at the reserved trash page 0; the caller masks them
+    off via ``kv_len`` (allocation fills positions in order, so the valid
+    region is a prefix)."""
+    b, n = table.shape
+    _, kv_heads, ps, d = pages.shape
+    g = pages[table]                                 # (B, n, hk, ps, d)
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, kv_heads, n * ps, d)
+
+
+@functools.partial(jax.jit, static_argnames=("plane",))
+def _paged_gather_jit(q, kpages, vpages, table, lens, *, plane):
+    kg = page_gather(kpages, table)
+    vg = page_gather(vpages, table)
+    o, _, _ = flash_attention_state(q, kg, vg, causal=False, kv_len=lens,
+                                    variant=plane)
+    return o
+
+
+def _paged_gather_impl(q, kpages, vpages, table, lens):
+    # pin the inner state dispatch to the resolved plane *outside* the jit
+    # trace (same pattern as the ring variant) so a later use_backend()
+    # switch is not shadowed by a stale shape-keyed executable
+    return _paged_gather_jit(q, kpages, vpages, table, lens,
+                             plane=registry.resolve_backend())
+
+
+def _paged_accepts(q, kpages, vpages, table, lens):
+    return q.shape[1] % kpages.shape[1] == 0
+
+
+registry.register(
+    "paged_attention", "gather", _paged_gather_impl,
+    plane=None, cost=Cost.XLA, accepts=_paged_accepts,
+    doc="chip decode: gather the slot's pages into a dense view, "
+        "prefix-masked flash over it (DESIGN.md §13)")
+
+
+def paged_attention(q, kpages, vpages, table, lens, *, variant=None):
+    """Decode attention over a paged KV cache: ``q`` (B, H, 1, d) against
+    the pages owned by each slot's ``table`` row, with ``lens`` (B,) valid
+    token counts.  Mesh-scoped under an ambient ring mesh (per-shard state
+    partials + psum merge); chip-scoped otherwise."""
+    return registry.dispatch("paged_attention", q, kpages, vpages, table,
+                             lens, variant=variant)
+
+
+# ---------------------------------------------------------------------------
+# chunk attention: one prefill chunk against (gathered prefix + itself)
+# — the chunked-prefill read path (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("plane",))
+def _chunk_merge_jit(q, kp, vp, plen, kc, vc, *, plane):
+    prefix = flash_attention_state(q, kp, vp, causal=False, kv_len=plen,
+                                   variant=plane)
+    chunk = flash_attention_state(q, kc, vc, causal=True, variant=plane)
+    return fa_k.merge_states(prefix, chunk)[0]
+
+
+def _chunk_merge_impl(q, kp, vp, plen, kc, vc):
+    return _chunk_merge_jit(q, kp, vp, plen, kc, vc,
+                            plane=registry.resolve_backend())
+
+
+@jax.jit
+def _chunk_oracle_impl(q, kp, vp, plen, kc, vc):
+    """Contiguous-layout oracle: gathers ``[prefix[:plen] || chunk]`` into a
+    fixed-capacity buffer so every valid key occupies the same index it has
+    in a one-shot prefill over the same tokens — softmax reductions then
+    fold the identical nonzero terms in the identical order, which is what
+    makes chunked prefill *bitwise* equal to one-shot on f32 (the merge
+    variant is allclose-exact but reassociates the denominator)."""
+    b, hq, c, d = q.shape
+    _, hk, cap, _ = kp.shape
+    group = hq // hk
+    cat_k = jnp.concatenate([kp, kc], axis=2)        # (b, hk, cap + c, d)
+    cat_v = jnp.concatenate([vp, vc], axis=2)
+    j = jnp.arange(cap)
+    # index map: buffer position j < plen reads the prefix, positions
+    # [plen, plen + c) read the chunk, the dead tail clamps (masked below)
+    src = jnp.where(j[None, :] < plen[:, None], j[None, :],
+                    jnp.clip(cap + j[None, :] - plen[:, None], 0,
+                             cap + c - 1))
+    idx = src[:, None, :, None]
+    kcat = jnp.take_along_axis(cat_k, idx, axis=2)   # (b, hk, cap, d)
+    vcat = jnp.take_along_axis(cat_v, idx, axis=2)
+    kk = jnp.repeat(kcat, group, axis=1) if group > 1 else kcat
+    vv = jnp.repeat(vcat, group, axis=1) if group > 1 else vcat
+    scale = d ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    qpos = plen[:, None, None, None] + jnp.arange(c)[None, None, :, None]
+    kpos = j[None, None, None, :]
+    live = kpos <= qpos                              # causal at offset plen
+    s = jnp.where(live, s, fa_k.NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(live, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def _chunk_accepts(q, kp, vp, plen, kc, vc):
+    return (q.shape[1] % kp.shape[1] == 0
+            and q.shape[2] == kc.shape[2])
+
+
+registry.register(
+    "chunk_attention", "merge", _chunk_merge_impl,
+    plane=None, cost=Cost.PALLAS, accepts=_chunk_accepts,
+    doc="two flash_attention_state calls (prefix-masked + causal chunk) "
+        "merged via merge_states — the production form")
+registry.register(
+    "chunk_attention", "oracle", _chunk_oracle_impl,
+    plane="xla", cost=Cost.XLA, accepts=_chunk_accepts,
+    doc="contiguous-layout materialising oracle; bitwise-equal to one-shot "
+        "prefill on f32 (the chunked-prefill parity test pins this)")
+
+
+def chunk_attention(q, kp, vp, plen, kc, vc, *, variant=None):
+    """One prefill chunk's attention: queries ``q`` (B, H, C, d) at absolute
+    positions ``plen + [0, C)`` attend the gathered prefix ``kp``/``vp``
+    (B, kv_heads, cap, d; valid length ``plen`` (B,) int32) plus the chunk's
+    own keys ``kc``/``vc`` causally.
+
+    Contract: ``plen + C <= cap`` — the scheduler reserves a slot's full
+    page span at admission (DESIGN.md §13), so the prefix buffer always has
+    room for the chunk (the oracle's contiguous gather relies on it)."""
+    return registry.dispatch("chunk_attention", q, kp, vp, plen, kc, vc,
+                             variant=variant)

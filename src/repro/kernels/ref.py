@@ -80,12 +80,20 @@ def attention_ref(q, k, v, *, causal: bool = True, scale=None) -> jax.Array:
     return attention_state_ref(q, k, v, causal=causal, scale=scale)[0]
 
 
-def attention_state_ref(q, k, v, *, causal: bool = True, scale=None
+def attention_state_ref(q, k, v, *, causal: bool = True, scale=None,
+                        kv_len=None
                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """:func:`attention_ref` that also returns the online-softmax state —
     ``(o, m, l)`` with row maxima ``m`` and denominators ``l`` both
     (b, hq, lq) f32 — the per-hop contract of the sequence-parallel ring
-    variant (mirrors the flash kernel's ``return_state=True``)."""
+    variant (mirrors the flash kernel's ``return_state=True``).
+
+    ``kv_len`` — optional (b,) int32 valid key prefix (the paged serve
+    tier's gathered-page mask, DESIGN.md §13): keys at positions
+    ``>= kv_len[b]`` are dead.  A batch row with no live key keeps
+    ``m == NEG_INF`` and ``l == lk`` (exp(0) per dead entry) — garbage by
+    construction, cancelled in any state merge by its ``exp(m - m_g) == 0``
+    weight, exactly like the flash kernel's prefix-masked path."""
     b, hq, lq, d = q.shape
     _, hk, lk, _ = k.shape
     group = hq // hk
@@ -97,6 +105,9 @@ def attention_state_ref(q, k, v, *, causal: bool = True, scale=None
     if causal:
         mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)
         s = jnp.where(mask, s, NEG_INF)
+    if kv_len is not None:
+        live = jnp.arange(lk)[None, None, None, :] < kv_len[:, None, None, None]
+        s = jnp.where(live, s, NEG_INF)
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])
     l = jnp.sum(p, axis=-1)

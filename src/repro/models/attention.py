@@ -33,7 +33,8 @@ from repro.models.layers import (apply_rope, dense_init, linear, rms_norm,
 
 Params = dict[str, Any]
 
-__all__ = ["attention_init", "attention_apply", "attention_decode"]
+__all__ = ["attention_init", "attention_apply", "attention_decode",
+           "attention_decode_paged", "attention_chunk"]
 
 
 def attention_init(key, cfg) -> Params:
@@ -137,3 +138,86 @@ def attention_decode(
     o = jnp.einsum("bkgs,bksd->bkgd", w, cache_v.astype(jnp.float32))
     o = o.reshape(B, 1, h * hd).astype(x.dtype)
     return linear(o, p["wo"].astype(x.dtype)), cache_k, cache_v
+
+
+def attention_decode_paged(
+    x: jax.Array,              # (B, 1, d)
+    p: Params,
+    cfg,
+    kpages: jax.Array,         # (P, hk, page_size, hd) — this layer's pool
+    vpages: jax.Array,
+    table: jax.Array,          # (B, n) int32 global page ids (0 = trash)
+    lens: jax.Array,           # (B,) int32 tokens already in each slot
+    write_page: jax.Array,     # (B,) int32 global page id for this token
+    write_off: jax.Array,      # (B,) int32 offset within that page
+    active: jax.Array,         # (B,) int32 — 0 freezes the slot
+    cos, sin,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode over the paged KV cache (DESIGN.md §13).
+
+    The write targets are precomputed by the caller (inactive slots point
+    at the reserved trash page 0, so frozen slots scatter garbage nowhere
+    that matters and the step stays branch-free); the attention read
+    dispatches ``paged_attention`` — the chip gather variant, or the
+    ring-sharded pmax/psum merge under an ambient mesh — with the
+    just-written token included via ``lens + active``."""
+    B = x.shape[0]
+    h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _project_qkv(x, p, cfg)                     # (B, 1, ·, hd)
+    q, k = _rope_qk(q, k, cos, sin, cfg)                  # (B, ·, 1, hd)
+    v = v.transpose(0, 2, 1, 3)
+
+    kw = k[:, :, 0, :].astype(kpages.dtype)               # (B, hk, hd)
+    vw = v[:, :, 0, :].astype(vpages.dtype)
+    # advanced-index scatter: (B,) page × (B,) offset → (B, hk, hd) update
+    kpages = kpages.at[write_page, :, write_off, :].set(kw)
+    vpages = vpages.at[write_page, :, write_off, :].set(vw)
+
+    out = dispatch("paged_attention", q, kpages, vpages, table,
+                   lens + active)                         # (B, h, 1, hd)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, h * hd).astype(x.dtype)
+    return linear(out, p["wo"].astype(x.dtype)), kpages, vpages
+
+
+def attention_chunk(
+    x: jax.Array,              # (1, C, d) — one slot's prompt chunk
+    p: Params,
+    cfg,
+    kpages: jax.Array,         # (P, hk, page_size, hd)
+    vpages: jax.Array,
+    table_row: jax.Array,      # (n,) int32 — this slot's page-table row
+    start: jax.Array,          # () int32 tokens already prefilled
+    page_idx: jax.Array,       # (C,) int32 global page per chunk token
+    write_off: jax.Array,      # (C,) int32 offset per chunk token
+    cos, sin,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One chunked-prefill step: write the chunk's K/V into the slot's
+    pages, then attend (gathered prefix, prefix-masked at ``start``) +
+    (chunk itself, causal) via the ``chunk_attention`` dispatch
+    (DESIGN.md §13).  Pad tokens past the chunk's valid length carry
+    ``page_idx == 0`` (trash) and are invisible as prefix keys on later
+    chunks; within this chunk the causal mask keeps them behind every
+    valid query."""
+    from repro.kernels.ops import page_gather
+
+    _, C, _ = x.shape
+    h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _project_qkv(x, p, cfg)                     # (1, C, ·, hd)
+    q, k = _rope_qk(q, k, cos, sin, cfg)                  # (1, ·, C, hd)
+    v = v.transpose(0, 2, 1, 3)
+
+    kw = k[0].transpose(1, 0, 2).astype(kpages.dtype)     # (C, hk, hd)
+    vw = v[0].transpose(1, 0, 2).astype(vpages.dtype)
+    kpages = kpages.at[page_idx, :, write_off, :].set(kw)
+    vpages = vpages.at[page_idx, :, write_off, :].set(vw)
+
+    # gather the prefix *after* the write — chunk keys land at positions
+    # >= start and the prefix mask (plen = start) keeps them dead, so the
+    # chunk is only visible through its causal kc/vc operand
+    kp = page_gather(kpages, table_row[None])             # (1, hk, cap, hd)
+    vp = page_gather(vpages, table_row[None])
+    plen = start.reshape(1).astype(jnp.int32)
+
+    out = dispatch("chunk_attention", q, kp, vp, plen, k, v)  # (1, h, C, hd)
+    out = out.transpose(0, 2, 1, 3).reshape(1, C, h * hd).astype(x.dtype)
+    return linear(out, p["wo"].astype(x.dtype)), kpages, vpages

@@ -418,6 +418,153 @@ class LM:
         new_cache["cur_len"] = cur + 1
         return logits, new_cache
 
+    # ------------------------------------------------------------------
+    # paged decode + chunked prefill (the continuous-batching serve tier,
+    # DESIGN.md §13) — dense/moe families only: ssm/hybrid carry
+    # recurrent state (no paged KV), vlm/audio need the stub frontend,
+    # and attn_window semantics are not expressed by the prefix mask.
+    # ------------------------------------------------------------------
+
+    def _check_paged(self):
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"paged serving supports dense/moe families, not "
+                f"{cfg.family!r}")
+        if cfg.m_rope or cfg.frontend is not None:
+            raise ValueError("paged serving does not take frontend/m-rope "
+                             "configs")
+        if getattr(cfg, "attn_window", 0):
+            raise ValueError("paged serving does not express attn_window "
+                             "masks")
+
+    def _paged_block(self, cfg, attn_fn):
+        """The per-layer body shared by paged decode and chunked prefill:
+        attention via ``attn_fn`` (which threads the page pool), then the
+        family's MLP/MoE — mirrors :meth:`_attn_decode_stack`."""
+        is_moe = cfg.family == "moe"
+
+        def body(h, inp):
+            lp, kp_l, vp_l = inp
+            hn = rms_norm(h, lp["attn_norm"])
+            a, kp_l, vp_l = attn_fn(hn, lp, kp_l, vp_l)
+            h = h + a
+            if is_moe:
+                hn2 = rms_norm(h, lp["moe_norm"])
+                y, _ = _moe_decode(hn2, lp, cfg)
+                if cfg.dense_residual:
+                    from repro.models.layers import mlp
+                    y = y + mlp(hn2, lp["dense_mlp"], cfg.mlp_kind)
+                h = h + y
+            else:
+                from repro.models.layers import mlp
+                h = h + mlp(rms_norm(h, lp["mlp_norm"]), lp["mlp"],
+                            cfg.mlp_kind)
+            return h, (kp_l, vp_l)
+        return body
+
+    def decode_step_paged(self, params: Params, state: Params,
+                          tokens: jax.Array, active: jax.Array
+                          ) -> tuple[jax.Array, Params]:
+        """One continuous-batching decode step over the paged KV cache.
+
+        ``state`` = {kpages, vpages (layers, P, hk, page_size, hd),
+        table (B, n), lens (B,)}; ``tokens`` (B, 1) int32; ``active`` (B,)
+        int32 — 0 freezes a slot (its write targets the trash page, its
+        length does not advance, its logits are garbage the engine
+        ignores).  The signature is admission-stable: slot recycling only
+        rewrites ``table``/``lens`` contents, never shapes, so the jit'd
+        step is traced once per engine (DESIGN.md §13)."""
+        self._check_paged()
+        cfg = self.cfg
+        B = tokens.shape[0]
+        lens = state["lens"].astype(jnp.int32)
+        active = active.astype(jnp.int32)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.act_dtype)
+
+        pos = lens[:, None]                               # per-slot positions
+        cos, sin = rope(pos, cfg.head_dim, cfg.rope_theta)
+
+        table = state["table"]
+        ps = state["kpages"].shape[3]
+        n = table.shape[1]
+        tpos = jnp.clip(lens // ps, 0, n - 1)
+        write_page = jnp.take_along_axis(table, tpos[:, None], axis=1)[:, 0]
+        write_page = jnp.where(active > 0, write_page, 0)
+        write_off = jnp.where(active > 0, lens % ps, 0)
+
+        def attn_fn(hn, lp, kp_l, vp_l):
+            return attn_mod.attention_decode_paged(
+                hn, lp["attn"], cfg, kp_l, vp_l, table, lens, write_page,
+                write_off, active, cos, sin)
+
+        h, (k_all, v_all) = _scan_or_unroll(
+            self._paged_block(cfg, attn_fn), x,
+            (params["layers"], state["kpages"], state["vpages"]),
+            cfg.scan_layers)
+
+        h = rms_norm(h, params["final_norm"])
+        logits = self._logits(params, h)[:, 0, :]
+        new_state = dict(state)
+        new_state["kpages"], new_state["vpages"] = k_all, v_all
+        new_state["lens"] = lens + active
+        return logits, new_state
+
+    def prefill_chunk(self, params: Params, state: Params,
+                      chunk: jax.Array, slot: jax.Array, start: jax.Array,
+                      valid_len: jax.Array) -> tuple[jax.Array, Params]:
+        """Prefill one chunk of one slot's prompt into the paged cache.
+
+        ``chunk`` (C,) int32 (pad past ``valid_len`` arbitrary); ``slot``/
+        ``start``/``valid_len`` scalar int32.  The chunk size C is static —
+        the engine pads the final partial chunk — so interleaving prefill
+        into the decode loop costs one trace per chunk size, not per
+        prompt.  Returns (logits (V,) at the chunk's last valid position,
+        new state with ``lens[slot] = start + valid_len``)."""
+        self._check_paged()
+        cfg = self.cfg
+        C = chunk.shape[0]
+        x = jnp.take(params["embed"], chunk[None], axis=0).astype(
+            cfg.act_dtype)
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.act_dtype)
+
+        start = start.astype(jnp.int32)
+        positions = (start + jnp.arange(C, dtype=jnp.int32))[None]  # (1, C)
+        cos, sin = rope(positions, cfg.head_dim, cfg.rope_theta)
+
+        table = state["table"]
+        ps = state["kpages"].shape[3]
+        n = table.shape[1]
+        table_row = jax.lax.dynamic_index_in_dim(table, slot, axis=0,
+                                                 keepdims=False)     # (n,)
+        gpos = start + jnp.arange(C, dtype=jnp.int32)
+        tpos = jnp.clip(gpos // ps, 0, n - 1)
+        valid = jnp.arange(C) < valid_len
+        page_idx = jnp.where(valid, table_row[tpos], 0)   # pad → trash
+        write_off = jnp.where(valid, gpos % ps, 0)
+
+        def attn_fn(hn, lp, kp_l, vp_l):
+            return attn_mod.attention_chunk(
+                hn, lp["attn"], cfg, kp_l, vp_l, table_row, start, page_idx,
+                write_off, cos, sin)
+
+        h, (k_all, v_all) = _scan_or_unroll(
+            self._paged_block(cfg, attn_fn), x,
+            (params["layers"], state["kpages"], state["vpages"]),
+            cfg.scan_layers)
+
+        h = rms_norm(h, params["final_norm"])
+        last = jax.lax.dynamic_index_in_dim(h, valid_len - 1, axis=1)
+        logits = self._logits(params, last)[0, 0, :]
+        new_state = dict(state)
+        new_state["kpages"], new_state["vpages"] = k_all, v_all
+        new_state["lens"] = state["lens"].at[slot].set(
+            (start + valid_len).astype(state["lens"].dtype))
+        return logits, new_state
+
     def _attn_decode_stack(self, params, x, ck, cv, cur, cos, sin, cfg):
         is_moe = cfg.family == "moe"
 

@@ -1,3 +1,8 @@
-from repro.serve.engine import Engine, SamplingParams, sample_token
+from repro.serve.engine import (ContinuousEngine, Engine, SamplingParams,
+                                ServeStats, sample_token)
+from repro.serve.kvcache import PagedCacheSpec, init_cache_state, make_spec
+from repro.serve.scheduler import Request, Scheduler
 
-__all__ = ["Engine", "SamplingParams", "sample_token"]
+__all__ = ["Engine", "ContinuousEngine", "SamplingParams", "ServeStats",
+           "sample_token", "PagedCacheSpec", "make_spec", "init_cache_state",
+           "Request", "Scheduler"]

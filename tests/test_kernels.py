@@ -158,3 +158,92 @@ def test_xla_and_interpret_paths_agree():
         oi = ops.matmul(a, b)
     np.testing.assert_allclose(np.asarray(ox), np.asarray(oi),
                                rtol=1e-5, atol=1e-5)
+
+
+class TestKvLenPrefixMask:
+    """``flash_attention_state(kv_len=...)`` — the prefix-valid masking the
+    paged serve tier decodes through (DESIGN.md §13)."""
+
+    def _qkv(self, b=2, hk=2, l=64, d=16):
+        rng = np.random.default_rng(7)
+        q = _arr(rng, (b, 4, 1, d), jnp.float32)
+        k = _arr(rng, (b, hk, l, d), jnp.float32)
+        v = _arr(rng, (b, hk, l, d), jnp.float32)
+        return q, k, v
+
+    @pytest.mark.parametrize("variant", ["interpret", "xla"])
+    def test_kv_len_equals_manual_slice(self, variant):
+        """Masked full-buffer attention == attention over the valid slice,
+        per batch row, for both the lens kernel and the XLA reference."""
+        q, k, v = self._qkv()
+        lens = jnp.asarray([13, 64], jnp.int32)
+        o, m, l = ops.flash_attention_state(q, k, v, causal=False,
+                                            kv_len=lens, variant=variant)
+        for b in range(2):
+            n = int(lens[b])
+            ow, _, _ = ops.flash_attention_state(
+                q[b:b + 1], k[b:b + 1, :, :n], v[b:b + 1, :, :n],
+                causal=False, variant="xla")
+            np.testing.assert_allclose(np.asarray(o[b]), np.asarray(ow[0]),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_lens_kernel_matches_ref(self):
+        from repro.kernels import ref as ref_k
+
+        q, k, v = self._qkv()
+        lens = jnp.asarray([29, 48], jnp.int32)
+        ok, mk, lk = ops.flash_attention_state(q, k, v, causal=False,
+                                               kv_len=lens,
+                                               variant="interpret")
+        ow, mw, lw = ref_k.attention_state_ref(q, k, v, causal=False,
+                                               kv_len=lens)
+        np.testing.assert_allclose(np.asarray(ok), np.asarray(ow),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(mk), np.asarray(mw),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(lk), np.asarray(lw),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestMergeStates:
+    """Online-softmax state algebra — the decode-side dual of the ring
+    rotation's accumulator (DESIGN.md §10 → §13)."""
+
+    def test_split_merge_equals_whole(self):
+        from repro.kernels import flash_attention as fa_k
+
+        rng = np.random.default_rng(3)
+        q = _arr(rng, (2, 4, 1, 16), jnp.float32)
+        k = _arr(rng, (2, 2, 64, 16), jnp.float32)
+        v = _arr(rng, (2, 2, 64, 16), jnp.float32)
+        whole = ops.flash_attention_state(q, k, v, causal=False,
+                                          variant="xla")
+        a = ops.flash_attention_state(q, k[:, :, :40], v[:, :, :40],
+                                      causal=False, variant="xla")
+        b = ops.flash_attention_state(q, k[:, :, 40:], v[:, :, 40:],
+                                      causal=False, variant="xla")
+        o, m, l = fa_k.merge_states(a, b)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(whole[0]),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(l), np.asarray(whole[2]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_all_masked_state_is_identity(self):
+        """A kv_len=0 shard carries m == NEG_INF and merges as a no-op —
+        how empty ring shards cancel in the paged decode merge."""
+        from repro.kernels import flash_attention as fa_k
+
+        rng = np.random.default_rng(4)
+        q = _arr(rng, (1, 4, 1, 16), jnp.float32)
+        k = _arr(rng, (1, 2, 32, 16), jnp.float32)
+        v = _arr(rng, (1, 2, 32, 16), jnp.float32)
+        full = ops.flash_attention_state(q, k, v, causal=False,
+                                         variant="xla")
+        empty = ops.flash_attention_state(
+            q, k, v, causal=False, kv_len=jnp.zeros((1,), jnp.int32),
+            variant="xla")
+        o, m, l = fa_k.merge_states(full, empty)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(full[0]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(l), np.asarray(full[2]),
+                                   rtol=1e-6, atol=1e-6)
