@@ -30,6 +30,20 @@ status, the kernel plane the registry resolved while it ran, and the
 device count / mesh shapes / axis roles it saw, so ``BENCH_*.json``
 trajectories stay comparable across PRs and machines — and scaling
 regressions are visible.
+
+Observability plane (DESIGN.md §14):
+
+``--trace-out PATH`` enables the span tracer for the whole run and writes
+a Chrome-trace JSON (load in Perfetto / chrome://tracing) covering every
+``dispatch:*`` selection, ``blocked.*`` pad/resolve, collective-plan
+event, and — for the serve suite — the continuous engine's
+admit/prefill/decode/demux phases.
+
+``--drift`` times every dispatched call against the measured cost model's
+stored seconds and reports entries whose live timing diverges beyond
+``REPRO_DRIFT_RATIO`` (default 4x) — the stale-calibration alarm.  The
+report lands in the ``--json-out`` payload under ``"drift"`` and stale
+rows print as warnings.
 """
 from __future__ import annotations
 
@@ -61,7 +75,51 @@ def main(argv=None) -> int:
     ap.add_argument("--tiny", action="store_true",
                     help="CI-smoke input sizes for --autotune-sweep")
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--trace-out", default=None,
+                    help="enable the span tracer and write a Chrome-trace "
+                         "JSON (Perfetto-loadable) for the whole run")
+    ap.add_argument("--drift", action="store_true",
+                    help="time dispatched calls against the measured cost "
+                         "model and flag stale calibrations (report under "
+                         "'drift' in --json-out)")
     args = ap.parse_args(argv)
+
+    # stdlib-only — safe before the first jax import
+    from repro.obs import drift as obs_drift
+    from repro.obs import trace as obs_trace
+    if args.trace_out:
+        obs_trace.TRACER.enable(capacity=1_000_000)
+
+    drift_scope = obs_drift.collect() if args.drift else None
+    if drift_scope is not None:
+        drift_scope.__enter__()
+
+    def finish(payload):
+        """Attach the obs artifacts every exit path shares: the drift
+        report into the payload, the trace ring onto disk."""
+        if drift_scope is not None:       # stop timing before reporting
+            drift_scope.__exit__(None, None, None)
+        rows = obs_drift.DETECTOR.report()
+        if args.drift or rows or obs_drift.DETECTOR.unmatched:
+            stale = [r for r in rows if r["stale"]]
+            payload["drift"] = {"enabled": args.drift,
+                                "threshold": obs_drift.threshold(),
+                                "unmatched": obs_drift.DETECTOR.unmatched,
+                                "rows": rows, "num_stale": len(stale)}
+            for r in stale:
+                print(f"WARNING: stale calibration {r['op']}/{r['variant']} "
+                      f"[{r['key']}]: observed {r['observed_seconds']:.3e}s "
+                      f"vs stored {r['stored_seconds']:.3e}s "
+                      f"({r['ratio']:.1f}x > {obs_drift.threshold():.1f}x)")
+        if args.trace_out:
+            payload.setdefault("meta", {})["trace_out"] = args.trace_out
+            payload["meta"]["trace_events"] = len(obs_trace.TRACER)
+            obs_trace.TRACER.save(args.trace_out)
+            print(f"trace: {len(obs_trace.TRACER)} events -> "
+                  f"{args.trace_out}")
+        if args.json_out:
+            with open(args.json_out, "w") as f:
+                json.dump(payload, f, default=str)
 
     if args.scaling_sweep or args.autotune_sweep:
         # Must precede the first jax import — jax locks the device count at
@@ -108,9 +166,7 @@ def main(argv=None) -> int:
         entry["seconds"] = round(time.time() - t0, 3)
         entry["backend"] = registry.resolve_backend()
         payload = {"meta": meta, "suites": {"autotune_sweep": entry}}
-        if args.json_out:
-            with open(args.json_out, "w") as f:
-                json.dump(payload, f, default=str)
+        finish(payload)
         print("\nautotune sweep complete")
         return 1 if entry["status"] == "error" else 0
 
@@ -139,9 +195,7 @@ def main(argv=None) -> int:
         entry["seconds"] = round(time.time() - t0, 3)
         entry["backend"] = registry.resolve_backend()
         payload = {"meta": meta, "suites": {"scaling_sweep": entry}}
-        if args.json_out:
-            with open(args.json_out, "w") as f:
-                json.dump(payload, f, default=str)
+        finish(payload)
         print("\nscaling sweep complete")
         return 1 if entry["status"] == "error" else 0
 
@@ -160,9 +214,7 @@ def main(argv=None) -> int:
         entry["seconds"] = round(time.time() - t0, 3)
         entry["backend"] = registry.resolve_backend()
         payload = {"meta": meta, "suites": {"backend_sweep": entry}}
-        if args.json_out:
-            with open(args.json_out, "w") as f:
-                json.dump(payload, f, default=str)
+        finish(payload)
         print("\nbackend sweep complete")
         return 1 if entry["status"] == "error" else 0
 
@@ -204,9 +256,7 @@ def main(argv=None) -> int:
         print(f"[{name}] done in {entry['seconds']:.1f}s "
               f"(backend={backend}, status={entry['status']})")
 
-    if args.json_out:
-        with open(args.json_out, "w") as f:
-            json.dump(payload, f, default=str)
+    finish(payload)
     print("\nbenchmarks complete" + (f" ({len(failed)} suite(s) failed: "
                                      f"{', '.join(failed)})" if failed else ""))
     return 1 if failed else 0

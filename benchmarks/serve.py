@@ -99,6 +99,29 @@ def _slot_capacity(reqs) -> int:
     return max(len(p) + m for p, m in reqs)
 
 
+def _obs_reset():
+    """Scope the serve metrics to the next timed region."""
+    from repro.obs import metrics as obs_metrics
+    obs_metrics.METRICS.reset("serve.")
+
+
+def _obs_row() -> dict:
+    """The engine's own metrics for the just-timed region (DESIGN.md §14)
+    — occupancy / queue depth / idle time come from the instrumentation
+    the serve loop always runs, not from ad-hoc recomputation here."""
+    from repro.obs import metrics as obs_metrics
+    snap = obs_metrics.METRICS.snapshot("serve.")
+    occ = snap.get("serve.occupancy_dist", {})
+    qd = snap.get("serve.queue_depth_dist", {})
+    idle = snap.get("serve.idle_s", {})
+    return {
+        "occupancy": round(float(occ.get("mean", 0.0)), 3),
+        "queue_depth_mean": round(float(qd.get("mean", 0.0)), 2),
+        "queue_depth_max": float(qd.get("max", 0.0)),
+        "idle_s": round(float(idle.get("value", 0.0)), 4),
+    }
+
+
 def fixed_slot_run(lm, params, reqs) -> dict:
     """Admission-order waves of SLOTS through the fixed engine."""
     import jax.numpy as jnp
@@ -146,15 +169,14 @@ def continuous_run(lm, params, reqs, *, chunk: int = 16) -> dict:
                            max_len=_slot_capacity(reqs), chunk_size=chunk,
                            sampling=SamplingParams(greedy=True))
     eng.serve(reqs[:SLOTS])             # warm traces outside the timed region
+    _obs_reset()
     t0 = time.monotonic()
-    outs, stats = eng.serve(reqs, collect_stats=True)
+    outs, _ = eng.serve(reqs, collect_stats=True)
     dt = time.monotonic() - t0
     useful = int(sum(len(o) for o in outs))
-    occ = [o for o in stats.occupancy if o > 0]
     return {"mode": "continuous", "slots": SLOTS, "requests": len(reqs),
             "useful_tokens": useful, "seconds": round(dt, 4),
-            "tokens_per_s": round(useful / dt, 1),
-            "occupancy": round(float(np.mean(occ)), 3)}
+            "tokens_per_s": round(useful / dt, 1), **_obs_row()}
 
 
 def qps_sweep(lm, params, reqs, rates) -> list[dict]:
@@ -168,13 +190,13 @@ def qps_sweep(lm, params, reqs, rates) -> list[dict]:
     rows = []
     for qps in rates:
         arrival = [i / qps for i in range(len(reqs))]
+        _obs_reset()
         t0 = time.monotonic()
         outs, stats = eng.serve(reqs, arrival=arrival, collect_stats=True)
         dt = time.monotonic() - t0
         useful = int(sum(len(o) for o in outs))
         lat = np.asarray(stats.token_latencies)
         ttft = np.asarray(stats.first_token_times)
-        occ = [o for o in stats.occupancy if o > 0]
         rows.append({
             "mode": "qps", "qps": qps, "requests": len(reqs),
             "useful_tokens": useful, "seconds": round(dt, 4),
@@ -182,7 +204,7 @@ def qps_sweep(lm, params, reqs, rates) -> list[dict]:
             "p50_token_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
             "p99_token_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
             "p99_ttft_ms": round(float(np.percentile(ttft, 99)) * 1e3, 3),
-            "occupancy": round(float(np.mean(occ)), 3),
+            **_obs_row(),
         })
     return rows
 
@@ -234,12 +256,13 @@ def main(full: bool = False) -> list[dict]:
         f"serve A/B ({len(reqs)} requests over {SLOTS} slots, one "
         f"{'4x' } long prompt, varied budgets; useful-tokens/s)", rows,
         ["mode", "requests", "useful_tokens", "seconds", "tokens_per_s",
-         "occupancy", "speedup_vs_fixed"])
+         "occupancy", "idle_s", "speedup_vs_fixed"])
 
     qps = qps_sweep(lm, params, reqs, (16, 64, 256) if full else (32, 256))
     print_table("serve offered-QPS sweep (continuous engine)", qps,
                 ["qps", "useful_tokens", "seconds", "tokens_per_s",
-                 "p50_token_ms", "p99_token_ms", "p99_ttft_ms", "occupancy"])
+                 "p50_token_ms", "p99_token_ms", "p99_ttft_ms", "occupancy",
+                 "queue_depth_max", "idle_s"])
 
     ab = prefill_ab(lm, params, full)
     print_table("serve chunked-prefill A/B (long prompt admitted under "

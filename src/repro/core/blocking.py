@@ -48,6 +48,9 @@ from typing import Any, Callable, Mapping, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 __all__ = ["round_up", "AutotuneCache", "get_cache", "autotune_enabled",
            "ambient_scope_key", "resolve_blocks", "blocked", "premeasure",
            "upgrade_legacy_keys", "PREMEASURE", "DEFAULT_CACHE_PATH"]
@@ -216,24 +219,32 @@ def resolve_blocks(
     can_measure = bool(autotune_enabled() and candidates
                        and measure is not None)
     if raw is not None and not (raw.get("_default") and can_measure):
+        obs_metrics.METRICS.counter(f"blocking.cache_hit.{op}").inc()
         hit = {k: int(v) for k, v in raw.items() if not k.startswith("_")}
         return {**defaults, **hit}
+    obs_metrics.METRICS.counter(f"blocking.cache_miss.{op}").inc()
     if can_measure:
         best: Optional[dict[str, int]] = None
         best_t = float("inf")
-        for cand in (defaults, *candidates):
-            merged = {**defaults, **cand}
-            try:
-                t = measure(merged)
-            except Exception:
-                continue                  # candidate doesn't compile: skip
-            if t < best_t:
-                best, best_t = merged, t
+        with obs_trace.TRACER.span(f"blocking.autotune:{op}", cat="blocking",
+                                   op=op, key=key):
+            for cand in (defaults, *candidates):
+                merged = {**defaults, **cand}
+                try:
+                    t = measure(merged)
+                except Exception:
+                    continue              # candidate doesn't compile: skip
+                if t < best_t:
+                    best, best_t = merged, t
         if best is not None:
             cache.put(key, best, seconds=best_t)
+            obs_trace.TRACER.event("blocking.measured", cat="blocking",
+                                   op=op, key=key, seconds=best_t)
             return best
     if autotune_enabled() and measure is None and candidates and raw is None:
         cache.put(key, defaults, default=True)
+        obs_trace.TRACER.event("blocking.default_marked", cat="blocking",
+                               op=op, key=key)
     return dict(defaults)
 
 
@@ -322,12 +333,21 @@ def blocked(
             bl = pinned                  # fully pinned: nothing to resolve
         else:
             dims = _dims_of(args, pad)
-            measure = None if _is_tracing(args) else _measure(args, interpret)
-            bl = resolve_blocks(op, dims, str(args[0].dtype), defaults,
-                                candidates, measure)
+            tracing = _is_tracing(args)
+            measure = None if tracing else _measure(args, interpret)
+            with obs_trace.TRACER.span(f"blocked.resolve:{op}",
+                                       cat="blocking", op=op,
+                                       traced=tracing):
+                bl = resolve_blocks(op, dims, str(args[0].dtype), defaults,
+                                    candidates, measure)
             bl.update(pinned)
-        return padded_call(*args, blocks=tuple(sorted(bl.items())),
-                           interpret=interpret)
+        blocks = tuple(sorted(bl.items()))
+        tracer = obs_trace.TRACER
+        if not tracer.enabled:           # attrs are built lazily on purpose
+            return padded_call(*args, blocks=blocks, interpret=interpret)
+        with tracer.span(f"blocked.pad_call:{op}", cat="blocking", op=op,
+                         blocks=",".join(f"{k}={v}" for k, v in blocks)):
+            return padded_call(*args, blocks=blocks, interpret=interpret)
 
     def premeasure_op(*args, interpret: bool = False) -> dict[str, int]:
         """Eager block measurement with these concrete args under the

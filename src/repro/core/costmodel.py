@@ -225,23 +225,36 @@ class CostModel:
 
     # -- lookup -------------------------------------------------------------
 
-    def seconds_for(self, op: str, args: Sequence[Any] = (),
-                    kwargs: Optional[Mapping[str, Any]] = None, *,
-                    scope: str = "chip", mesh: str = "-") -> dict[str, float]:
-        """Measured whole-call seconds per variant for this call shape —
-        exact key first, shape-class fallback, ``{}`` when uncalibrated."""
+    def lookup(self, op: str, args: Sequence[Any] = (),
+               kwargs: Optional[Mapping[str, Any]] = None, *,
+               scope: str = "chip", mesh: str = "-",
+               ) -> tuple[Optional[str], dict[str, float]]:
+        """``(matched_key, {variant: seconds})`` for this call shape —
+        exact key first, shape-class fallback, ``(None, {})`` when
+        uncalibrated.  The matched key is the store entry that actually
+        answered (the exact key and its class key differ), which is what
+        drift reporting (DESIGN.md §14) must name: "re-sweep this key" is
+        only actionable if the key exists in the file."""
         dims = signature(args, kwargs)
         if not dims:
-            return {}
+            return None, {}
         dtype = dtype_of(args)
         data = self._load()
         for key in (self.key(op, dims, dtype, scope, mesh),
                     self.class_key(op, dims, dtype, scope, mesh)):
             entry = data.get(key)
             if entry:
-                return {name: float(rec["seconds"])
-                        for name, rec in entry.items() if "seconds" in rec}
-        return {}
+                return key, {name: float(rec["seconds"])
+                             for name, rec in entry.items()
+                             if "seconds" in rec}
+        return None, {}
+
+    def seconds_for(self, op: str, args: Sequence[Any] = (),
+                    kwargs: Optional[Mapping[str, Any]] = None, *,
+                    scope: str = "chip", mesh: str = "-") -> dict[str, float]:
+        """Measured whole-call seconds per variant for this call shape —
+        exact key first, shape-class fallback, ``{}`` when uncalibrated."""
+        return self.lookup(op, args, kwargs, scope=scope, mesh=mesh)[1]
 
     def agreement(self, op: Optional[str] = None) -> list[dict]:
         """(measured, predicted) pairs for every exact-key record carrying

@@ -60,16 +60,21 @@ import dataclasses
 import importlib
 import os
 import threading
+import time
 from typing import Any, Callable, Iterator, Optional
 
 import jax
 
 from repro.core import execlevel
 from repro.core.topology import MeshTopology, topology_of
+from repro.obs import drift as obs_drift
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 __all__ = ["Variant", "SelectContext", "OperatorRegistry", "REGISTRY",
            "select_context", "Cost",
-           "register", "unregister", "dispatch", "select", "variants", "ops",
+           "register", "unregister", "dispatch", "select", "explain",
+           "variants", "ops",
            "use_backend", "requested_backend", "resolve_backend", "PLANES",
            "SCOPES"]
 
@@ -177,6 +182,14 @@ def _plane_available(plane: Optional[str], ctx: SelectContext) -> bool:
     if plane == "pallas":
         return ctx.platform == "tpu"
     return True          # 'interpret', 'xla', and DSL-level (None) run anywhere
+
+
+def _has_tracer(args: tuple, kwargs: dict) -> bool:
+    """Whether any argument is a jax tracer — drift timing (and anything
+    else host-side) must never run under an ambient trace."""
+    return (any(isinstance(a, jax.core.Tracer) for a in args)
+            or any(isinstance(v, jax.core.Tracer)
+                   for v in kwargs.values()))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -327,6 +340,14 @@ class OperatorRegistry:
                              f"registered: {sorted(table)}")
         return table[name]
 
+    @staticmethod
+    def _scope_mesh(ctx: SelectContext) -> tuple[str, str]:
+        """The (scope, mesh) key components of the ambient context — the
+        cost model's and the drift detector's shared vocabulary."""
+        if ctx.scope == "mesh" and ctx.topology is not None:
+            return "mesh", ctx.topology.describe()
+        return "chip", "-"
+
     def _calibrated(self, op: str, args: tuple, kwargs: dict,
                     ctx: SelectContext,
                     table: dict[str, Variant]) -> dict[str, float]:
@@ -337,32 +358,21 @@ class OperatorRegistry:
         happened to be measured)."""
         from repro.core import costmodel      # lazy: keep import graph thin
 
-        scope, mesh = ("mesh", ctx.topology.describe()) \
-            if ctx.scope == "mesh" and ctx.topology is not None \
-            else ("chip", "-")
+        scope, mesh = self._scope_mesh(ctx)
         measured = costmodel.get_model().seconds_for(
             op, args, kwargs, scope=scope, mesh=mesh)
         if len(set(measured) & set(table)) < 2:
             return {}
         return measured
 
-    def select(self, op: str, *args: Any, variant: Optional[str] = None,
-               **kwargs: Any) -> Variant:
-        """Pick the variant :func:`dispatch` would run (without running it).
-
-        Precedence (DESIGN.md §6 + §11): explicit ``variant=`` pin > scope
-        match > requested plane > **calibrated cost** (measured seconds
-        from the cost model for this shape class/scope/mesh, which also
-        outrank scope when present — observed roofline position beats the
-        mesh-first heuristic) > static ``cost=`` prior > name.  An
-        explicitly requested plane (``use_backend`` / ``REPRO_KERNELS``)
-        disables calibrated re-ranking: the knob is an instruction, the
-        model a measurement."""
-        if variant is not None:
-            return self.get(op, variant)
-        ctx = select_context()
-        req = requested_backend()
-        table = self._table(op)
+    def _ranked(self, op: str, args: tuple, kwargs: dict,
+                ctx: SelectContext, req: Optional[str],
+                table: dict[str, Variant]
+                ) -> tuple[list[Variant], dict[str, float]]:
+        """All variants of ``op`` in selection order, plus the calibrated
+        seconds that shaped the order — the single ranking both
+        :meth:`select` and :meth:`explain` consume, so they cannot
+        diverge."""
         measured = self._calibrated(op, args, kwargs, ctx, table) \
             if req is None else {}
         # Scope match outranks the plane request: under an active mesh the
@@ -379,19 +389,173 @@ class OperatorRegistry:
                            0 if v.scope == ctx.scope else 1,
                            0 if (req is not None and v.plane == req) else 1,
                            v.cost, v.name))
-        for v in ranked:
+        return ranked, measured
+
+    def _select(self, op: str, args: tuple, kwargs: dict
+                ) -> tuple[Variant, SelectContext, int]:
+        """The winner, the context it won under, and its rank index —
+        rank > 0 means higher-ranked candidates were rejected (a
+        degradation fall-off: ring→chip, 2-D→1-D, pallas→xla)."""
+        ctx = select_context()
+        req = requested_backend()
+        table = self._table(op)
+        ranked, _ = self._ranked(op, args, kwargs, ctx, req, table)
+        for i, v in enumerate(ranked):
             if v.is_available(ctx) and v.matches(*args, **kwargs):
-                return v
+                return v, ctx, i
         raise LookupError(
             f"no variant of op {op!r} is available for platform "
             f"{ctx.platform!r} and these arguments; registered: "
             f"{[v.name for v in ranked]}")
 
+    def select(self, op: str, *args: Any, variant: Optional[str] = None,
+               **kwargs: Any) -> Variant:
+        """Pick the variant :func:`dispatch` would run (without running it).
+
+        Precedence (DESIGN.md §6 + §11): explicit ``variant=`` pin > scope
+        match > requested plane > **calibrated cost** (measured seconds
+        from the cost model for this shape class/scope/mesh, which also
+        outrank scope when present — observed roofline position beats the
+        mesh-first heuristic) > static ``cost=`` prior > name.  An
+        explicitly requested plane (``use_backend`` / ``REPRO_KERNELS``)
+        disables calibrated re-ranking: the knob is an instruction, the
+        model a measurement."""
+        if variant is not None:
+            return self.get(op, variant)
+        return self._select(op, args, kwargs)[0]
+
+    def explain(self, op: str, *args: Any, variant: Optional[str] = None,
+                **kwargs: Any) -> list[dict]:
+        """The full ranked candidate table for this call, without
+        executing anything (DESIGN.md §14).
+
+        One row per variant in selection order.  Each carries the ranking
+        inputs (``cost``, ``calibrated_seconds``, ``source``) and the
+        verdict: ``selected`` on exactly one row (the variant
+        :meth:`dispatch` would run — same ranking, same predicates), and
+        on every loser a ``reason``:
+
+            plane-unavailable       requested hardware plane absent here
+            scope-mismatch          mesh-scoped variant, no ambient mesh
+            available-predicate     ``available(ctx)`` said no
+            accepts-predicate       ``accepts(*args)`` said no (includes
+                                    the block-sparse density gate)
+            outranked-by-calibration  admissible, but a measured variant
+                                    ranked ahead (§11)
+            outranked               admissible, beaten on static order
+            no-variant-selected     every candidate rejected (the
+                                    LookupError dispatch would raise)
+
+        A predicate that *raises* is reported as a rejection with the
+        exception inline rather than propagating — explain is a
+        diagnostic and must survive what it diagnoses."""
+        ctx = select_context()
+        req = requested_backend()
+        table = self._table(op)
+        if variant is not None:
+            pin = self.get(op, variant)
+            return [{"op": op, "rank": 0, "variant": pin.name,
+                     "plane": pin.plane, "scope": pin.scope,
+                     "cost": pin.cost, "calibrated_seconds": None,
+                     "source": "pinned", "selected": True,
+                     "reason": "selected: explicit variant= pin"}]
+        ranked, measured = self._ranked(op, args, kwargs, ctx, req, table)
+        scope, mesh = self._scope_mesh(ctx)
+        rows: list[dict] = []
+        winner_calibrated = False
+        have_winner = False
+        for i, v in enumerate(ranked):
+            row = {"op": op, "rank": i, "variant": v.name,
+                   "plane": v.plane, "scope": v.scope, "cost": v.cost,
+                   "calibrated_seconds": measured.get(v.name),
+                   "source": "calibrated" if v.name in measured
+                   else "static",
+                   "level": ctx.level.name, "ambient_scope": scope,
+                   "mesh": mesh, "selected": False}
+            if not _plane_available(v.plane, ctx):
+                row["reason"] = (f"plane-unavailable: {v.plane!r} is not "
+                                 f"available on {ctx.platform!r}")
+            elif v.scope == "mesh" and ctx.scope != "mesh":
+                row["reason"] = ("scope-mismatch: mesh-scoped variant "
+                                 "without an ambient O3/O4 mesh")
+            else:
+                try:
+                    ok = v.available(ctx) if v.available is not None \
+                        else True
+                    why = "available-predicate: rejected this context " \
+                          f"(level={ctx.level.name}, mesh={mesh})"
+                except Exception as e:          # diagnose, don't die
+                    ok, why = False, ("available-predicate raised "
+                                      f"{type(e).__name__}: {e}")
+                if ok:
+                    try:
+                        ok = v.matches(*args, **kwargs)
+                        why = "accepts-predicate: rejected these " \
+                              "arguments" + (f" — {v.doc}" if v.doc
+                                             else "")
+                    except Exception as e:
+                        ok, why = False, ("accepts-predicate raised "
+                                          f"{type(e).__name__}: {e}")
+                if not ok:
+                    row["reason"] = why
+                elif not have_winner:
+                    have_winner = True
+                    winner_calibrated = v.name in measured
+                    row["selected"] = True
+                    row["reason"] = "selected: first admissible in rank " \
+                        "order" + (" (calibrated)" if winner_calibrated
+                                   else "")
+                else:
+                    row["reason"] = ("outranked-by-calibration: admissible,"
+                                     " but a measured variant ranked ahead"
+                                     if winner_calibrated and
+                                     v.name not in measured
+                                     else "outranked: admissible, beaten "
+                                     "on rank order")
+            rows.append(row)
+        if not have_winner and rows:
+            for row in rows:
+                row["no_variant_selected"] = True
+        return rows
+
     def dispatch(self, op: str, *args: Any, variant: Optional[str] = None,
                  **kwargs: Any) -> Any:
-        """Select (per the module docstring's rules) and invoke."""
-        return self.select(op, *args, variant=variant, **kwargs).impl(
-            *args, **kwargs)
+        """Select (per the module docstring's rules) and invoke.
+
+        Instrumented (DESIGN.md §14): per-(op, variant) selection counts
+        and fall-off counts are always on (two dict bumps); a span per
+        dispatch when the tracer is enabled; whole-call drift timing only
+        under :func:`repro.obs.drift.collect` with concrete arguments —
+        the ``block_until_ready`` it needs is a host sync no default path
+        ever pays."""
+        if variant is not None:
+            v = self.get(op, variant)
+            obs_metrics.METRICS.counter(f"dispatch.{op}.{v.name}").inc()
+            return v.impl(*args, **kwargs)
+        v, ctx, rank = self._select(op, args, kwargs)
+        obs_metrics.METRICS.counter(f"dispatch.{op}.{v.name}").inc()
+        if rank > 0:
+            # a higher-ranked candidate was rejected: the degradation
+            # ladder in action (ring→chip, 2-D→1-D, pallas→xla, ...)
+            obs_metrics.METRICS.counter(f"dispatch.falloff.{op}").inc()
+        tracer = obs_trace.TRACER
+        if not (tracer.enabled or obs_drift.collecting()):
+            return v.impl(*args, **kwargs)      # the fast path
+        scope, mesh = self._scope_mesh(ctx)
+        if rank > 0:
+            tracer.event("dispatch.falloff", cat="dispatch", op=op,
+                         variant=v.name, rank=rank)
+        with tracer.span(f"dispatch:{op}", cat="dispatch", op=op,
+                         variant=v.name, plane=str(v.plane),
+                         scope=v.scope, level=ctx.level.name, mesh=mesh):
+            if obs_drift.collecting() and not _has_tracer(args, kwargs):
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(v.impl(*args, **kwargs))
+                obs_drift.DETECTOR.observe(
+                    op, v.name, time.perf_counter() - t0, args, kwargs,
+                    scope=scope, mesh=mesh)
+                return out
+            return v.impl(*args, **kwargs)
 
 
 #: Process-global registry instance — the single retargeting plane.
@@ -401,5 +565,6 @@ register = REGISTRY.register
 unregister = REGISTRY.unregister
 dispatch = REGISTRY.dispatch
 select = REGISTRY.select
+explain = REGISTRY.explain
 variants = REGISTRY.variants
 ops = REGISTRY.ops

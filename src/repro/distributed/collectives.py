@@ -46,9 +46,19 @@ import jax.numpy as jnp
 
 from repro.core import registry
 from repro.core.topology import MeshTopology, topology_of
+from repro.obs import trace as obs_trace
 
 __all__ = ["ReducePlan", "reduce_plan", "ambient_plan", "flat_index",
            "RingPlan", "ring_plan", "ambient_ring_plan"]
+
+
+def _plan_event(kind: str, axes: tuple[str, ...], **attrs) -> None:
+    """One trace event per plan execution *trace* (these run inside
+    shard_map/jit, so the event fires at trace time — once per
+    compilation, not once per device step; attrs are static strings, the
+    tracer never sees a jax value)."""
+    obs_trace.TRACER.event(f"collectives.{kind}", cat="collectives",
+                           axes="x".join(axes) or "-", **attrs)
 
 
 def _entry(axes: tuple[str, ...]):
@@ -136,6 +146,8 @@ class ReducePlan:
 
     def psum(self, x):
         """Hierarchical all-reduce: data axes (intra-pod) first, then pod."""
+        _plan_event("psum", self.batch_axes,
+                    hierarchical=self.hierarchical)
         for a in self.data_axes:
             x = jax.lax.psum(x, a)
         for a in self.pod_axes:
@@ -148,6 +160,9 @@ class ReducePlan:
         replicated over the pod axes (out_specs: data entry only).  Data
         axes scatter outermost-first so the shard layout matches
         ``P((*data_axes,))`` along the scattered dim."""
+        _plan_event("psum_scatter", self.batch_axes,
+                    hierarchical=self.hierarchical,
+                    scatter_dimension=scatter_dimension)
         for a in self.data_axes:
             x = jax.lax.psum_scatter(x, a, scatter_dimension=scatter_dimension,
                                      tiled=True)
@@ -158,6 +173,8 @@ class ReducePlan:
     def all_gather(self, x, axis: int = 0):
         """Reassemble batch-axis row shards: gather intra-pod first (ICI),
         then inter-pod (DCN).  Inverse of sharding by :meth:`spec_entry`."""
+        _plan_event("all_gather", self.batch_axes,
+                    hierarchical=self.hierarchical)
         for a in reversed(self.data_axes):
             x = jax.lax.all_gather(x, a, axis=axis, tiled=True)
         for a in reversed(self.pod_axes):
@@ -249,6 +266,7 @@ class RingPlan:
 
     def shift(self, x):
         """Rotate ``x`` one hop around the ring (pod-major flat order)."""
+        _plan_event("ring_shift", self.axes, size=self.size)
         axis = self.axes if len(self.axes) > 1 else self.axes[0]
         return jax.lax.ppermute(x, axis, self.perm)
 
@@ -263,12 +281,14 @@ class RingPlan:
         each shard folds hops locally (§10), paged decode keeps pages
         pinned and *reduces* the per-shard (o·w, w) partials in one step
         (DESIGN.md §13)."""
+        _plan_event("ring_psum", self.axes, size=self.size)
         axis = self.axes if len(self.axes) > 1 else self.axes[0]
         return jax.lax.psum(x, axis)
 
     def pmax(self, x):
         """All-max over the ring participants — the softmax row-max half of
         the decode-side state merge (pairs with :meth:`psum`)."""
+        _plan_event("ring_pmax", self.axes, size=self.size)
         axis = self.axes if len(self.axes) > 1 else self.axes[0]
         return jax.lax.pmax(x, axis)
 

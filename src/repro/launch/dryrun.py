@@ -23,7 +23,6 @@ import argparse
 import functools
 import json
 import sys
-import time
 from typing import Any, Optional
 
 import jax
@@ -37,6 +36,7 @@ from repro.distributed.partition import (param_specs, data_axes, zero1_specs,
                                          fsdp_specs)
 from repro.launch.mesh import make_production_mesh, describe
 from repro.launch.shapes import SHAPES, ShapeSpec, applicable
+from repro.obs.trace import clock
 from repro.models.lm import LM
 from repro.optim import adamw
 from repro.optim.schedules import wsd, cosine
@@ -214,7 +214,7 @@ def run_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
         return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                 "status": "skipped", "reason": why}
 
-    t0 = time.time()
+    t0 = clock()
     if shape.kind == "train":
         jitted, args = build_train(cfg, mesh, microbatches=microbatches)
     elif shape.kind == "prefill":
@@ -224,10 +224,10 @@ def run_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
 
     with compat.set_mesh(mesh):
         lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = clock() - t0
+        t0 = clock()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = clock() - t0
 
     mem = compiled.memory_analysis()
     n_chips = mesh.devices.size

@@ -14,7 +14,6 @@ from __future__ import annotations
 import argparse
 import contextlib
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +23,7 @@ from repro.configs import get_config
 from repro.core import ExecLevel, use_level
 from repro.launch.train import reduce_config
 from repro.models.lm import LM
+from repro.obs.trace import clock
 from repro.serve import Engine, SamplingParams
 
 
@@ -79,10 +79,10 @@ def main(argv=None) -> int:
     if cfg.frontend:
         fe = jnp.zeros((args.batch, cfg.frontend_len, cfg.d_model),
                        jnp.float32)
-    t0 = time.time()
+    t0 = clock()
     out = engine.generate(prompts, max_new_tokens=args.new_tokens,
                           frontend_embeds=fe)
-    dt = time.time() - t0
+    dt = clock() - t0
     toks = args.batch * args.new_tokens
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s incl. compile)")

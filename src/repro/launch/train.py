@@ -13,7 +13,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import sys
-import time
 from typing import Optional
 
 import jax
@@ -21,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compat
+from repro.obs.trace import clock
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
@@ -133,7 +133,7 @@ class Trainer:
             worker: int = 0) -> dict:
         history = []
         start = int(jax.device_get(self.state.step))
-        t0 = time.time()
+        t0 = clock()
         ctx = compat.set_mesh(self.mesh) if self.mesh is not None \
             else _nullcontext()
         with ctx:
@@ -145,7 +145,7 @@ class Trainer:
                 self.heartbeats.post(worker, i)
                 if (i + 1) % log_every == 0 or i == start:
                     loss = float(jax.device_get(metrics["loss"]))
-                    dt = time.time() - t0
+                    dt = clock() - t0
                     print(f"step {i+1:5d} loss {loss:.4f} "
                           f"({dt/(i-start+1):.2f}s/step)")
                     history.append({"step": i + 1, "loss": loss})

@@ -45,6 +45,10 @@ class Heartbeat:
     worker: int
     step: int
     time: float
+    #: Optional load signal: the serve tier posts its slot-occupancy
+    #: fraction per host-loop iteration (DESIGN.md §14), so the elastic
+    #: re-mesh policy can distinguish an idle worker from a dead one.
+    occupancy: Optional[float] = None
 
 
 class HeartbeatStore:
@@ -53,8 +57,10 @@ class HeartbeatStore:
     def __init__(self) -> None:
         self._beats: dict[int, Heartbeat] = {}
 
-    def post(self, worker: int, step: int, now: Optional[float] = None) -> None:
-        self._beats[worker] = Heartbeat(worker, step, now or time.time())
+    def post(self, worker: int, step: int, now: Optional[float] = None,
+             occupancy: Optional[float] = None) -> None:
+        self._beats[worker] = Heartbeat(worker, step, now or time.time(),
+                                        occupancy)
 
     def all(self) -> dict[int, Heartbeat]:
         return dict(self._beats)
@@ -69,8 +75,11 @@ class FileHeartbeatStore(HeartbeatStore):
         self.dir = directory
         os.makedirs(directory, exist_ok=True)
 
-    def post(self, worker: int, step: int, now: Optional[float] = None) -> None:
+    def post(self, worker: int, step: int, now: Optional[float] = None,
+             occupancy: Optional[float] = None) -> None:
         beat = {"worker": worker, "step": step, "time": now or time.time()}
+        if occupancy is not None:
+            beat["occupancy"] = occupancy
         tmp = os.path.join(self.dir, f".hb{worker}.tmp")
         with open(tmp, "w") as f:
             json.dump(beat, f)
@@ -82,7 +91,8 @@ class FileHeartbeatStore(HeartbeatStore):
             if name.startswith("hb") and name.endswith(".json"):
                 with open(os.path.join(self.dir, name)) as f:
                     d = json.load(f)
-                out[d["worker"]] = Heartbeat(d["worker"], d["step"], d["time"])
+                out[d["worker"]] = Heartbeat(d["worker"], d["step"],
+                                             d["time"], d.get("occupancy"))
         return out
 
 

@@ -33,6 +33,8 @@ import numpy as np
 from repro.core import execlevel, registry
 from repro.kernels.flash_attention import NEG_INF
 from repro.models.lm import LM
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 Params = dict[str, Any]
 
@@ -184,8 +186,10 @@ class ContinuousEngine:
                  max_len: int = 2048, chunk_size: int = 32,
                  num_pages: Optional[int] = None,
                  sampling: SamplingParams = SamplingParams(greedy=True),
-                 queue_depth: Optional[int] = None):
+                 queue_depth: Optional[int] = None,
+                 heartbeats=None, worker: int = 0):
         from repro.distributed.collectives import ambient_ring_plan
+        from repro.runtime.fault_tolerance import HeartbeatStore
         from repro.serve.kvcache import init_cache_state, make_spec
         from repro.serve.scheduler import Scheduler
 
@@ -193,6 +197,13 @@ class ContinuousEngine:
         self.params = params
         self.sampling = sampling
         self.chunk_size = chunk_size
+        # Liveness plane (DESIGN.md §14): one beat per host-loop iteration
+        # carrying (step, occupancy), against the same store/Monitor
+        # protocol the trainer posts to — a stalled serve loop goes DEAD on
+        # the coordinator exactly like a stalled train step.
+        self.heartbeats = heartbeats if heartbeats is not None \
+            else HeartbeatStore()
+        self.worker = worker
         self.active_backend = registry.resolve_backend()
         self.active_level = execlevel.current()
 
@@ -331,8 +342,9 @@ class ContinuousEngine:
                 return
             if req.first_token_t == 0.0:
                 req.first_token_t = time.monotonic()
-                stats.first_token_times.append(
-                    req.first_token_t - req.submit_t)
+                ttft = req.first_token_t - req.submit_t
+                stats.first_token_times.append(ttft)
+                obs_metrics.METRICS.histogram("serve.ttft_s").record(ttft)
             if eos_id is not None and tok == eos_id:
                 live.pop((slot, g))
                 # the slot was decoding past the (lagged) eos discovery;
@@ -360,39 +372,46 @@ class ContinuousEngine:
             bucket.clear()
 
         it = 0
+        tracer = obs_trace.TRACER
+        metrics = obs_metrics.METRICS
         while to_submit or sched.queue or sched.running \
                 or pending_old or pending_cur:
             t_iter = time.monotonic()
             emitted = 0
 
-            # 1. submissions whose arrival time has come
-            while to_submit and (t_iter - t0) >= arrival[to_submit[0].rid]:
-                req = to_submit.pop(0)
-                req.submit_t = time.monotonic()
-                assert sched.submit(req), "admission queue overflow"
+            with tracer.span("serve.admit", cat="serve"):
+                # 1. submissions whose arrival time has come
+                while to_submit \
+                        and (t_iter - t0) >= arrival[to_submit[0].rid]:
+                    req = to_submit.pop(0)
+                    req.submit_t = time.monotonic()
+                    assert sched.submit(req), "admission queue overflow"
 
-            # 2. admission — rewrites table/lens contents, never shapes
-            admitted = False
-            while (req := sched.admit_next()) is not None:
-                gen[req.slot] += 1
-                live[(req.slot, gen[req.slot])] = req
-                prefilling.append(req.slot)
-                admitted = True
-            if admitted:
-                self._upload_tables()
+                # 2. admission — rewrites table/lens contents, never shapes
+                admitted = False
+                while (req := sched.admit_next()) is not None:
+                    gen[req.slot] += 1
+                    live[(req.slot, gen[req.slot])] = req
+                    prefilling.append(req.slot)
+                    admitted = True
+                if admitted:
+                    self._upload_tables()
 
             # 3. one prefill chunk for the oldest prefilling slot
             if prefilling:
                 slot = prefilling[0]
                 req = live[(slot, gen[slot])]
                 valid = min(C, req.prompt_len - req.prefilled)
-                chunk = np.zeros((C,), np.int32)
-                chunk[:valid] = req.prompt[req.prefilled:
-                                           req.prefilled + valid]
-                logits, self.state = self._prefill_chunk(
-                    self.params, self.state, jnp.asarray(chunk),
-                    np.int32(slot), np.int32(req.prefilled),
-                    np.int32(valid))
+                with tracer.span("serve.prefill_chunk", cat="serve",
+                                 slot=slot, offset=req.prefilled,
+                                 valid=valid):
+                    chunk = np.zeros((C,), np.int32)
+                    chunk[:valid] = req.prompt[req.prefilled:
+                                               req.prefilled + valid]
+                    logits, self.state = self._prefill_chunk(
+                        self.params, self.state, jnp.asarray(chunk),
+                        np.int32(slot), np.int32(req.prefilled),
+                        np.int32(valid))
                 req.prefilled += valid
                 sched.lens[slot] = req.prefilled      # lockstep mirror
                 if req.prefilled >= req.prompt_len:
@@ -410,14 +429,17 @@ class ContinuousEngine:
                         pending_cur.append(("drain", slot, int(gen[slot])))
 
             # 4. one batched decode step over the active slots
-            if active_np.any():
-                self.state, nxt, key = self._decode(
-                    self.params, self.state, cur, active_dev[0], key)
+            n_active = int((active_np > 0).sum())
+            if n_active:
+                with tracer.span("serve.decode", cat="serve",
+                                 active=n_active):
+                    self.state, nxt, key = self._decode(
+                        self.params, self.state, cur, active_dev[0], key)
                 cur = nxt
                 snapshot = np.where(active_np > 0, gen, 0)
                 pending_cur.append(("d", nxt, snapshot))
                 on = active_np > 0
-                emitted += int(on.sum())
+                emitted += n_active
                 sched.lens[on] += 1                   # lockstep mirror
                 budget[on] -= 1
                 # budget exhaustion is host-exact: release the slot *now*
@@ -431,18 +453,31 @@ class ContinuousEngine:
             # 5. window boundary: demux the previous window's device refs
             it += 1
             if it % self.EOS_CHECK_EVERY == 0:
-                process(pending_old)
+                with tracer.span("serve.demux", cat="serve",
+                                 window=len(pending_old)):
+                    process(pending_old)
                 pending_old, pending_cur = pending_cur, pending_old
 
+            dt = time.monotonic() - t_iter
+            occ = n_active / B
+            if emitted:
+                metrics.counter("serve.tokens").inc(emitted)
+                metrics.histogram("serve.token_latency_s").record(
+                    dt, n=emitted)
+            if occ > 0:
+                # distribution of the *decoding* occupancy per iteration;
+                # the scheduler exports the instantaneous gauge
+                metrics.histogram("serve.occupancy_dist").record(occ)
+            self.heartbeats.post(self.worker, it, occupancy=occ)
             if collect_stats:
-                dt = time.monotonic() - t_iter
                 stats.iter_times.append(dt)
                 stats.tokens_per_iter.append(emitted)
-                stats.occupancy.append(float((active_np > 0).sum()) / B)
+                stats.occupancy.append(occ)
                 stats.token_latencies.extend([dt] * emitted)
 
             if not sched.running and not pending_old and not pending_cur \
                     and (to_submit or sched.queue):
+                metrics.counter("serve.idle_s").inc(0.0005)
                 time.sleep(0.0005)        # idle: waiting on arrivals
 
         process(pending_old)

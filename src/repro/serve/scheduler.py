@@ -34,6 +34,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.serve.kvcache import PagedCacheSpec
 
 __all__ = ["Request", "Scheduler"]
@@ -89,6 +90,12 @@ class Scheduler:
                 f"request {req.rid}: {req.total_tokens} tokens exceed the "
                 f"slot capacity {self.spec.slot_capacity}")
         self.queue.append(req)
+        obs_metrics.METRICS.counter("serve.submitted").inc()
+        obs_metrics.METRICS.gauge("serve.queue_depth").set(len(self.queue))
+        # distribution of the depth each submission saw (the gauge is
+        # last-write-wins and always 0 once the run drains)
+        obs_metrics.METRICS.histogram("serve.queue_depth_dist").record(
+            len(self.queue))
         return True
 
     def _pages_by_residue(self, npages: int) -> list[int]:
@@ -120,6 +127,8 @@ class Scheduler:
         req.prefilled = 0
         req.generated = []
         self.running[slot] = req
+        obs_metrics.METRICS.counter("serve.admitted").inc()
+        self._export_gauges()
         return req
 
     def recycle(self, slot: int) -> Request:
@@ -135,9 +144,17 @@ class Scheduler:
             self.table[slot, p] = 0
         self.lens[slot] = 0
         self.free_slots.append(slot)
+        obs_metrics.METRICS.counter("serve.recycled").inc()
+        self._export_gauges()
         return req
 
     # -- introspection ------------------------------------------------------
+
+    def _export_gauges(self) -> None:
+        m = obs_metrics.METRICS
+        m.gauge("serve.queue_depth").set(len(self.queue))
+        m.gauge("serve.free_pages").set(self.num_free_pages)
+        m.gauge("serve.occupancy").set(self.occupancy)
 
     @property
     def num_free_pages(self) -> int:
