@@ -73,6 +73,24 @@ def _cases(tiny: bool) -> dict[str, list[tuple]]:
     cases["spmm"] = [(f"{S.format_of(sp_m)}_n{sn}k{k}", (sp_m, sp_x), {},
                       2.0 * nnz * k)]
 
+    # SpGEMM (DESIGN.md §15): BSR×BSR clustered blocks.  FLOPs are the
+    # Gustavson count (2·npairs·bs³) from the symbolic phase — the BSR
+    # ``cost_dims()`` fingerprint (block, nnzb) keys the calibration per
+    # density, so the measured chip↔mesh crossover is density-specific.
+    from repro.sparse.spgemm import spgemm_symbolic
+    gn, bs = (256, 8) if tiny else (1024, 8)
+    gnb = gn // bs
+    gocc = rng.random((gnb, gnb)) < 0.08
+    gd = rng.standard_normal((gn, gn)).astype(np.float32)
+    gA = np.where(np.kron(gocc, np.ones((bs, bs), bool)), gd, 0.0) \
+        .astype(np.float32)
+    gB = np.where(np.kron(gocc.T, np.ones((bs, bs), bool)), gd.T, 0.0) \
+        .astype(np.float32)
+    ga, gb = S.bsr_from_dense(gA, block=bs), S.bsr_from_dense(gB, block=bs)
+    gsym = spgemm_symbolic(ga, gb)
+    cases["spgemm"] = [(f"bsr_n{gn}b{bs}", (ga, gb), {},
+                        2.0 * gsym.npairs * bs ** 3)]
+
     fn = 1024 if tiny else 4096
     z = jnp.asarray(rng.standard_normal(fn) + 1j * rng.standard_normal(fn),
                     jnp.complex64)

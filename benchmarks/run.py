@@ -60,7 +60,7 @@ def main(argv=None) -> int:
                     help="the paper's full input sweeps (slower)")
     ap.add_argument("--only", "--suite", default=None,
                     choices=["mod2am", "mod2as", "mod2f", "cg", "spmm",
-                             "attention", "serve", "roofline"])
+                             "spgemm", "attention", "serve", "roofline"])
     ap.add_argument("--backend-sweep", action="store_true",
                     help="benchmark every registered registry variant per op "
                          "and print a per-variant comparison table")
@@ -121,9 +121,10 @@ def main(argv=None) -> int:
             with open(args.json_out, "w") as f:
                 json.dump(payload, f, default=str)
 
-    if args.scaling_sweep or args.autotune_sweep:
+    if args.scaling_sweep or args.autotune_sweep or args.only == "spgemm":
         # Must precede the first jax import — jax locks the device count at
-        # init.  An explicit caller-provided count wins.
+        # init (the spgemm suite's chip-vs-mesh rows need the devices too).
+        # An explicit caller-provided count wins.
         flags = os.environ.get("XLA_FLAGS", "")
         if "xla_force_host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = (
@@ -148,7 +149,8 @@ def main(argv=None) -> int:
         from repro.core import costmodel
         # --only speaks suite names; translate to the registry op swept
         op_of = {"mod2am": "matmul", "mod2as": "solver_spmv", "mod2f": "fft",
-                 "spmm": "spmm", "attention": "flash_attention"}
+                 "spmm": "spmm", "spgemm": "spgemm",
+                 "attention": "flash_attention"}
         t0 = time.time()
         try:
             rows = autotune_sweep.main(only=op_of.get(args.only),
@@ -218,8 +220,8 @@ def main(argv=None) -> int:
         print("\nbackend sweep complete")
         return 1 if entry["status"] == "error" else 0
 
-    from benchmarks import (mod2am, mod2as, mod2f, cg, spmm, attention,
-                            serve, roofline_table)
+    from benchmarks import (mod2am, mod2as, mod2f, cg, spmm, spgemm,
+                            attention, serve, roofline_table)
 
     suites = {
         "mod2am": lambda: mod2am.main(args.full),
@@ -227,6 +229,7 @@ def main(argv=None) -> int:
         "mod2f": lambda: mod2f.main(args.full),
         "cg": lambda: cg.main(args.full),
         "spmm": lambda: spmm.main(args.full),
+        "spgemm": lambda: spgemm.main(args.full),
         "attention": lambda: attention.main(args.full),
         "serve": lambda: serve.main(args.full),
         "roofline": lambda: _roofline(roofline_table),

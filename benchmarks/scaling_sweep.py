@@ -98,6 +98,21 @@ def _problems():
         lambda: registry.select("spmm", sp_m, sp_x).name,
         S.format_of(sp_m))
 
+    # SpGEMM (DESIGN.md §15): clustered BSR × BSR, n = 1024 so the 128
+    # block-rows divide every swept row partition (8 / 4 / 4); the mesh
+    # shapes retarget to the Cannon-style pair-partitioned variant
+    gn, gbs = 1024, 8
+    gnb = gn // gbs
+    gocc = rng.random((gnb, gnb)) < 0.08
+    gd = rng.standard_normal((gn, gn)).astype(np.float32)
+    gA = np.where(np.kron(gocc, np.ones((gbs, gbs), bool)), gd, 0.0) \
+        .astype(np.float32)
+    ga = S.bsr_from_dense(gA, block=gbs)
+    problems["spgemm"] = (
+        lambda: S.spgemm(ga, ga),
+        lambda: registry.select("spgemm", ga, ga).name,
+        "bsr")
+
     # causal GQA attention: L = 256 splits into 2*ring half-blocks on every
     # swept shape (ring = 8 / 4 / 4), so the sequence-parallel ring variant
     # (DESIGN.md §10) selects wherever a mesh is ambient

@@ -66,11 +66,14 @@ def signature(args: Sequence[Any],
     (offset tuples, configs) contribute nothing; an all-shapeless call has
     an empty signature and is never calibrated.
 
-    Structured kwargs may expose ``cost_dims() -> {str: int}`` to
-    contribute a fingerprint (``mask.window=256``) — how a
+    Structured arguments — positional or keyword — may expose
+    ``cost_dims() -> {str: int}`` to contribute a fingerprint
+    (``mask.window=256``, ``a0.nnzb=96``): how a
     :class:`~repro.sparse.maskcompiler.MaskSpec` keeps differently-masked
-    calls of the same shapes in different shape classes, so the
-    dense ↔ block-sparse crossover calibrates per mask structure."""
+    calls of the same shapes in different shape classes, and how a
+    :class:`~repro.sparse.formats.BSR` operand keys SpGEMM's chip ↔ mesh
+    crossover per nnz density and block edge, not per dense shape
+    (DESIGN.md §11/§15)."""
     dims: dict[str, int] = {}
     for i, a in enumerate(args):
         shape = getattr(a, "shape", None)
@@ -81,6 +84,9 @@ def signature(args: Sequence[Any],
                 dims[f"a{i}.{ax}"] = int(s)
         except TypeError:
             continue
+        if callable(getattr(a, "cost_dims", None)):
+            for sk, sv in a.cost_dims().items():
+                dims[f"a{i}.{sk}"] = int(sv)
     for k, v in (kwargs or {}).items():
         if isinstance(v, bool) or (isinstance(v, int) and not hasattr(v, "shape")):
             dims[k] = int(v)

@@ -142,6 +142,7 @@ _PROVIDERS = {
     "solver_spmv": ("repro.numerics.spmv", "repro.distributed.numerics",
                     "repro.sparse.spmm"),
     "spmm": ("repro.sparse.spmm", "repro.distributed.numerics"),
+    "spgemm": ("repro.sparse.spgemm", "repro.distributed.numerics"),
 }
 
 #: provider modules already imported (an op's chip module may register it
@@ -192,6 +193,28 @@ def _has_tracer(args: tuple, kwargs: dict) -> bool:
                    for v in kwargs.values()))
 
 
+def _attach_out_sharding(v: "Variant", ctx: Optional["SelectContext"],
+                         args: tuple, kwargs: dict, out: Any) -> Any:
+    """Attach the variant's decided output layout to the result as an
+    advisory ``out_sharding`` attribute (DESIGN.md §15).  ``ctx`` may be
+    None (the pinned-variant path never built one); it is only computed
+    when the variant actually declares a hook.  Attachment is best-effort:
+    a result type without settable attributes just returns unannotated —
+    the decision is advisory, never load-bearing for correctness."""
+    if v.out_sharding is None:
+        return out
+    if ctx is None:
+        ctx = select_context()
+    sh = v.decide_out_sharding(ctx, args, kwargs)
+    if sh is None:
+        return out
+    try:
+        object.__setattr__(out, "out_sharding", sh)
+    except (AttributeError, TypeError):
+        pass
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class Variant:
     op: str
@@ -202,7 +225,27 @@ class Variant:
     cost: float = 10.0
     available: Optional[Callable[[SelectContext], bool]] = None
     accepts: Optional[Callable[..., bool]] = None
+    #: optional ``out_sharding(ctx, *args, **kwargs) -> NamedSharding|None``
+    #: — the output layout this variant *decides* (the first consumer: mesh
+    #: SpGEMM, whose product comes back block-sharded so a chained op never
+    #: reshards, DESIGN.md §15).  dispatch() attaches the decision to the
+    #: result as an advisory ``out_sharding`` attribute and explain()
+    #: surfaces it per candidate row.
+    out_sharding: Optional[Callable[..., Any]] = None
     doc: str = ""
+
+    def decide_out_sharding(self, ctx: SelectContext, args: tuple,
+                            kwargs: dict) -> Optional[Any]:
+        """The sharding this variant would leave the output in for this
+        call, or None (no declaration / the hook declined or raised —
+        a layout *decision* must never break the dispatch that carries
+        it)."""
+        if self.out_sharding is None:
+            return None
+        try:
+            return self.out_sharding(ctx, *args, **kwargs)
+        except Exception:
+            return None
 
     def is_available(self, ctx: SelectContext) -> bool:
         if not _plane_available(self.plane, ctx):
@@ -278,13 +321,14 @@ class OperatorRegistry:
                  cost: float = 10.0,
                  available: Optional[Callable[[SelectContext], bool]] = None,
                  accepts: Optional[Callable[..., bool]] = None,
+                 out_sharding: Optional[Callable[..., Any]] = None,
                  doc: str = ""):
         """Register a variant.  Usable directly or as a decorator."""
         if impl is None:
             def deco(fn: Callable) -> Callable:
                 self.register(op, name, fn, plane=plane, scope=scope,
                               cost=cost, available=available, accepts=accepts,
-                              doc=doc)
+                              out_sharding=out_sharding, doc=doc)
                 return fn
             return deco
         if plane is not None and plane not in PLANES:
@@ -300,8 +344,8 @@ class OperatorRegistry:
                     f"unregister it first to replace")
             table[name] = Variant(op=op, name=name, impl=impl, plane=plane,
                                   scope=scope, cost=cost, available=available,
-                                  accepts=accepts, doc=doc or impl.__doc__
-                                  or "")
+                                  accepts=accepts, out_sharding=out_sharding,
+                                  doc=doc or impl.__doc__ or "")
         return impl
 
     def unregister(self, op: str, name: Optional[str] = None) -> None:
@@ -454,10 +498,13 @@ class OperatorRegistry:
         table = self._table(op)
         if variant is not None:
             pin = self.get(op, variant)
+            pin_sh = pin.decide_out_sharding(ctx, args, kwargs)
             return [{"op": op, "rank": 0, "variant": pin.name,
                      "plane": pin.plane, "scope": pin.scope,
                      "cost": pin.cost, "calibrated_seconds": None,
                      "source": "pinned", "selected": True,
+                     "out_sharding": str(pin_sh) if pin_sh is not None
+                     else None,
                      "reason": "selected: explicit variant= pin"}]
         ranked, measured = self._ranked(op, args, kwargs, ctx, req, table)
         scope, mesh = self._scope_mesh(ctx)
@@ -465,11 +512,13 @@ class OperatorRegistry:
         winner_calibrated = False
         have_winner = False
         for i, v in enumerate(ranked):
+            sh = v.decide_out_sharding(ctx, args, kwargs)
             row = {"op": op, "rank": i, "variant": v.name,
                    "plane": v.plane, "scope": v.scope, "cost": v.cost,
                    "calibrated_seconds": measured.get(v.name),
                    "source": "calibrated" if v.name in measured
                    else "static",
+                   "out_sharding": str(sh) if sh is not None else None,
                    "level": ctx.level.name, "ambient_scope": scope,
                    "mesh": mesh, "selected": False}
             if not _plane_available(v.plane, ctx):
@@ -531,7 +580,8 @@ class OperatorRegistry:
         if variant is not None:
             v = self.get(op, variant)
             obs_metrics.METRICS.counter(f"dispatch.{op}.{v.name}").inc()
-            return v.impl(*args, **kwargs)
+            return _attach_out_sharding(v, None, args, kwargs,
+                                        v.impl(*args, **kwargs))
         v, ctx, rank = self._select(op, args, kwargs)
         obs_metrics.METRICS.counter(f"dispatch.{op}.{v.name}").inc()
         if rank > 0:
@@ -540,7 +590,8 @@ class OperatorRegistry:
             obs_metrics.METRICS.counter(f"dispatch.falloff.{op}").inc()
         tracer = obs_trace.TRACER
         if not (tracer.enabled or obs_drift.collecting()):
-            return v.impl(*args, **kwargs)      # the fast path
+            return _attach_out_sharding(v, ctx, args, kwargs,
+                                        v.impl(*args, **kwargs))
         scope, mesh = self._scope_mesh(ctx)
         if rank > 0:
             tracer.event("dispatch.falloff", cat="dispatch", op=op,
@@ -554,8 +605,9 @@ class OperatorRegistry:
                 obs_drift.DETECTOR.observe(
                     op, v.name, time.perf_counter() - t0, args, kwargs,
                     scope=scope, mesh=mesh)
-                return out
-            return v.impl(*args, **kwargs)
+                return _attach_out_sharding(v, ctx, args, kwargs, out)
+            return _attach_out_sharding(v, ctx, args, kwargs,
+                                        v.impl(*args, **kwargs))
 
 
 #: Process-global registry instance — the single retargeting plane.

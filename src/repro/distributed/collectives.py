@@ -49,7 +49,8 @@ from repro.core.topology import MeshTopology, topology_of
 from repro.obs import trace as obs_trace
 
 __all__ = ["ReducePlan", "reduce_plan", "ambient_plan", "flat_index",
-           "RingPlan", "ring_plan", "ambient_ring_plan"]
+           "RingPlan", "ring_plan", "ambient_ring_plan",
+           "CannonPlan", "cannon_plan", "ambient_cannon_plan"]
 
 
 def _plan_event(kind: str, axes: tuple[str, ...], **attrs) -> None:
@@ -315,3 +316,128 @@ def ambient_ring_plan() -> Optional[RingPlan]:
         return None
     plan = ring_plan(ctx.mesh, ctx.topology)
     return plan if plan.axes else None
+
+
+# ---------------------------------------------------------------------------
+# Cannon schedules (the SpGEMM mesh plane, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CannonPlan:
+    """A Cannon-style 2-D distribution schedule for mesh SpGEMM.
+
+    Classic Cannon lays C's block grid over a ``rows × cols`` process mesh
+    and skew-rotates A panels row-wise and B panels column-wise.  On a
+    shard_map mesh the two rotations dualize into the collective pair this
+    plan emits: every device computes a slice of the *block-product pair
+    list* (sharded flat over all participating axes — the skew collapsed
+    into the partition), then partials meet C's owners via
+
+        psum           over the col (model) axes — B's column broadcast,
+                       reversed: partial products for the same output
+                       block-row land on every column rank and fold there
+        psum_scatter   over the row (pod × data) axes — A's row broadcast
+                       reversed into a reduce-scatter, leaving C's value
+                       blocks row-sharded (tiled, dim 0) with only
+                       already-reduced tiles crossing the pod seam
+
+    ``row_axes`` are the batch-role (pod-major) axes C's block-rows shard
+    over; ``col_axes`` the model-role axes that only ever carry partials.
+    Frozen/hashable so shard_map executables cache per plan, exactly like
+    :class:`ReducePlan`/:class:`RingPlan`.
+    """
+    mesh: object                     # jax.sharding.Mesh (hashable)
+    topo: MeshTopology
+    row_axes: tuple[str, ...]        # pod-major: C's block-row shard axes
+    col_axes: tuple[str, ...]        # model-role: partial-product axes
+
+    @property
+    def rows(self) -> int:
+        """Row ranks = product of the row-axis sizes (C's shard count)."""
+        w = 1
+        for a in self.row_axes:
+            w *= self.topo.size(a)
+        return w
+
+    @property
+    def cols(self) -> int:
+        """Column ranks = product of the col-axis sizes."""
+        w = 1
+        for a in self.col_axes:
+            w *= self.topo.size(a)
+        return w
+
+    @property
+    def size(self) -> int:
+        """Total participants = rows × cols (the pair-list shard count)."""
+        return self.rows * self.cols
+
+    @property
+    def all_axes(self) -> tuple[str, ...]:
+        """Every participating axis, row-major then col — the flat
+        pair-list partition order."""
+        return self.row_axes + self.col_axes
+
+    def row_spec_entry(self):
+        """PartitionSpec entry sharding a dim over the row axes — the
+        layout :meth:`reduce_partials` leaves C's values in."""
+        return _entry(self.row_axes)
+
+    def pair_spec_entry(self):
+        """PartitionSpec entry sharding the pair list over *all* axes."""
+        return _entry(self.all_axes)
+
+    def schedule(self) -> tuple[tuple[str, str], ...]:
+        """The emitted schedule as (collective, axis) steps — col-axis
+        all-reduces first, then row-axis reduce-scatters — for
+        introspection and tests."""
+        steps = [("all_reduce", a) for a in self.col_axes]
+        steps += [("reduce_scatter", a) for a in self.row_axes]
+        return tuple(steps)
+
+    # -- execution (call these inside shard_map) ----------------------------
+
+    def reduce_partials(self, x, scatter_dimension: int = 0):
+        """Fold the per-device partial block products into row-sharded C
+        values: psum over the col axes, then tiled reduce-scatter over the
+        row axes (outermost-first, so the shard layout matches
+        ``P(row_spec_entry())`` along ``scatter_dimension``)."""
+        _plan_event("cannon_reduce", self.all_axes,
+                    rows=self.rows, cols=self.cols)
+        for a in self.col_axes:
+            x = jax.lax.psum(x, a)
+        for a in self.row_axes:
+            x = jax.lax.psum_scatter(x, a, scatter_dimension=scatter_dimension,
+                                     tiled=True)
+        return x
+
+    def pair_index(self):
+        """This device's flat pair-list shard index (row-major), inside
+        shard_map."""
+        sizes = tuple(self.topo.size(a) for a in self.all_axes)
+        return flat_index(self.all_axes, sizes)
+
+
+def cannon_plan(mesh, topo: Optional[MeshTopology] = None) -> CannonPlan:
+    """Build the :class:`CannonPlan` for ``mesh`` from its axis roles:
+    batch-role (pod × data) axes become the row dimension, model-role axes
+    the column dimension, degenerate (size-1) axes dropped.  A ``(data=8,
+    model=1)`` mesh plans an 8×1 distribution (flat reduce-scatter, no
+    column stage); ``(pod=2, data=2, model=2)`` plans 4×2."""
+    topo = topo if topo is not None else topology_of(mesh)
+    if topo is None:
+        raise ValueError("cannon_plan needs a mesh (got None)")
+    rows = tuple(a for a in topo.axes("pod", "data") if topo.size(a) > 1)
+    cols = tuple(a for a in topo.axes("model") if topo.size(a) > 1)
+    return CannonPlan(mesh=mesh, topo=topo, row_axes=rows, col_axes=cols)
+
+
+def ambient_cannon_plan() -> Optional[CannonPlan]:
+    """The Cannon plan for the ambient O3/O4 mesh, or None outside one (or
+    when the mesh has no batch-role axis to row-shard over — a model-only
+    mesh degrades SpGEMM to the chip formulation)."""
+    ctx = registry.select_context()
+    if ctx.scope != "mesh" or ctx.topology is None:
+        return None
+    plan = cannon_plan(ctx.mesh, ctx.topology)
+    return plan if plan.row_axes else None

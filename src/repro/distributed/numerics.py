@@ -54,20 +54,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import registry
+from repro.core.blocking import round_up
 from repro.core.containers import Dense, unwrap, wrap
 from repro.kernels import ref
 from repro.core.topology import topology_of
-from repro.distributed.collectives import (ReducePlan, _entry, ambient_plan,
-                                           reduce_plan)
+from repro.distributed.collectives import (CannonPlan, ReducePlan, _entry,
+                                           ambient_cannon_plan, ambient_plan,
+                                           cannon_plan, reduce_plan)
 from repro.numerics.sparse import CSR, DIA, ELL
+from repro.sparse.formats import BSR
+
 from repro.numerics.spmv import csr_row_reduce, dia_panel
 
 __all__ = ["cg_mesh", "mesh_matmul", "mesh_matmul_2d", "mesh_fft",
-           "mesh_spmv", "mesh_spmm", "MESH_SPMV_VARIANTS", "data_size",
-           "block_cyclic_perm"]
+           "mesh_spmv", "mesh_spmm", "mesh_spgemm", "MESH_SPMV_VARIANTS",
+           "data_size", "block_cyclic_perm"]
 
 #: The mesh-scoped solver_spmv variant names, keyed by layout.
 MESH_SPMV_VARIANTS = {CSR: "mesh_csr", ELL: "mesh_ell", DIA: "mesh_dia"}
@@ -297,6 +301,121 @@ registry.register("spmm", "mesh_spmm", mesh_spmm, scope="mesh", cost=1.0,
                   available=_mesh_available, accepts=_spmm_accepts,
                   doc="row-sharded SpMM over pod x data; RHS panel "
                       "replicated (CSR/ELL/DIA; BSR stays chip)")
+
+
+# ---------------------------------------------------------------------------
+# Cannon-style mesh SpGEMM (the blocked plane's sparse × sparse, DESIGN.md
+# §15): pair list sharded over ALL mesh axes, partials folded by a
+# CannonPlan, the product returned block-row-sharded — with the decided
+# output layout propagated through dispatch (Variant.out_sharding)
+# ---------------------------------------------------------------------------
+
+def _require_cannon_plan() -> CannonPlan:
+    plan = ambient_cannon_plan()
+    if plan is None:
+        raise RuntimeError(
+            "mesh_spgemm invoked without an ambient O3/O4 mesh carrying a "
+            "batch-role (pod/data) axis; enter use_level(O3) first")
+    return plan
+
+
+def _cannon_available(ctx: registry.SelectContext) -> bool:
+    return (ctx.topology is not None and
+            bool(cannon_plan(ctx.mesh, ctx.topology).row_axes))
+
+
+@functools.lru_cache(maxsize=None)
+def _spgemm_exec(plan: CannonPlan, ncpad: int):
+    """One executable per (plan, padded output length): each device runs
+    the pair formulation on its pair-list shard (einsum over its gathered
+    block pairs, segment-sum into a full-length f32 partial), then the
+    plan's psum-cols + reduce-scatter-rows fold leaves C's value blocks
+    row-sharded.  Operand values replicate — the pair *list* carries the
+    2-D distribution (the Cannon skew collapsed into the partition)."""
+    pair_entry = plan.pair_spec_entry()
+    row_entry = plan.row_spec_entry()
+
+    def local(av, bv, pp, pq, pr):
+        prod = jnp.einsum("pij,pjk->pik", av[pp].astype(jnp.float32),
+                          bv[pq].astype(jnp.float32))
+        part = jax.ops.segment_sum(prod, pr, num_segments=ncpad)
+        return plan.reduce_partials(part, scatter_dimension=0) \
+            .astype(av.dtype)
+
+    return jax.jit(shard_map(
+        local, mesh=plan.mesh,
+        in_specs=(P(), P(), P(pair_entry), P(pair_entry), P(pair_entry)),
+        out_specs=P(row_entry, None, None), check_rep=False))
+
+
+def mesh_spgemm(a, b, **_: Any):
+    """C = A·B over the ambient mesh, Cannon-style (DESIGN.md §15).
+
+    The symbolic phase runs on host exactly as on chip; the pair list then
+    shards flat over every participating axis (padded to a multiple of the
+    plan size with pairs pointing at an appended all-zero A block — slot-0
+    contributions of exact zero), and the per-device partials meet C's
+    owners through the plan's hierarchical fold.  C's value blocks come
+    back sharded ``P(row_axes)`` with ``len`` padded to a multiple of the
+    row width; the pad blocks hold zeros and ``rowp`` never references
+    them, so every downstream consumer (todense, chained spmm) sees the
+    exact product.  The dispatcher attaches the decided layout to the
+    result (``C.out_sharding``), so a chained mesh op consumes the product
+    without a reshard."""
+    from repro.sparse.spgemm import spgemm_symbolic
+
+    plan = _require_cannon_plan()
+    sym = spgemm_symbolic(a, b)
+    bs = a.block
+    nc = sym.nc
+    if nc == 0 or sym.npairs == 0:
+        return BSR(values=jnp.zeros((nc, bs, bs), a.values.dtype),
+                   cols=jnp.asarray(sym.c_cols),
+                   rowp=jnp.asarray(sym.c_rowp),
+                   shape=(a.shape[0], b.shape[1]), block=bs)
+    ncpad = round_up(nc, plan.rows)
+    npad = round_up(sym.npairs, plan.size)
+    fill = npad - sym.npairs
+    pp = np.concatenate([sym.pair_p,
+                         np.full(fill, a.values.shape[0], np.int32)])
+    pq = np.concatenate([sym.pair_q, np.zeros(fill, np.int32)])
+    pr = np.concatenate([sym.pair_r, np.zeros(fill, np.int32)])
+    av = jnp.concatenate([a.values, jnp.zeros((1, bs, bs), a.values.dtype)])
+    vals = _spgemm_exec(plan, ncpad)(av, b.values, jnp.asarray(pp),
+                                     jnp.asarray(pq), jnp.asarray(pr))
+    cols = np.concatenate([np.asarray(sym.c_cols),
+                           np.zeros(ncpad - nc, np.int32)])
+    return BSR(values=vals, cols=jnp.asarray(cols),
+               rowp=jnp.asarray(sym.c_rowp),
+               shape=(a.shape[0], b.shape[1]), block=bs)
+
+
+def _spgemm_mesh_accepts(a, b, **_):
+    plan = ambient_cannon_plan()
+    return (plan is not None and isinstance(a, BSR) and isinstance(b, BSR)
+            and a.block == b.block and a.shape[1] == b.shape[0]
+            and a.shape[0] % (plan.rows * a.block) == 0)
+
+
+def _spgemm_out_sharding(ctx: registry.SelectContext, a, b, **_):
+    """The layout mesh_spgemm actually leaves C.values in: block-sharded
+    over the plan's row axes — what shard_map's out_specs produce, declared
+    so dispatch can hand it to the consumer (and explain can show it)."""
+    plan = ambient_cannon_plan()
+    if plan is None:
+        return None
+    # no trailing Nones: jax normalises realised output specs that way, so
+    # the declaration compares == to C.values.sharding, not just equivalent
+    return NamedSharding(plan.mesh, P(plan.row_spec_entry()))
+
+
+registry.register("spgemm", "mesh_spgemm", mesh_spgemm, scope="mesh",
+                  cost=1.0, available=_cannon_available,
+                  accepts=_spgemm_mesh_accepts,
+                  out_sharding=_spgemm_out_sharding,
+                  doc="Cannon-style pair partition over pod x data (x "
+                      "model): psum cols + reduce-scatter rows; product "
+                      "returned block-row-sharded")
 
 
 # ---------------------------------------------------------------------------

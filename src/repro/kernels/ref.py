@@ -11,7 +11,8 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import NEG_INF
 
 __all__ = ["matmul_ref", "spmv_ell_ref", "spmv_dia_ref", "spmm_ell_ref",
-           "spmm_bsr_ref", "fft_stage_ref", "fft_ref", "attention_ref",
+           "spmm_bsr_ref", "bsr_todense_ref", "spgemm_bsr_ref",
+           "fft_stage_ref", "fft_ref", "attention_ref",
            "attention_state_ref", "attention_masked_ref", "attention_chunked"]
 
 
@@ -58,6 +59,36 @@ def spmm_bsr_ref(values: jax.Array, cols: jax.Array, rowp: jax.Array,
     seg = csr_row_ids(rowp, nblocks)
     out = jax.ops.segment_sum(prod, seg, num_segments=nbrows)
     return out.reshape(nbrows * bs, k)
+
+
+def bsr_todense_ref(values: jax.Array, cols: jax.Array, rowp: jax.Array,
+                    shape: tuple[int, int]) -> jax.Array:
+    """BSR → dense, scatter-add over the block grid (jnp; device-side dual
+    of the container's host ``todense``)."""
+    from repro.numerics.sparse import csr_row_ids
+
+    n, m = shape
+    nblocks, bs, _ = values.shape
+    nbr, nbc = n // bs, m // bs
+    if nblocks == 0:
+        return jnp.zeros((n, m), values.dtype)
+    rows = csr_row_ids(rowp, nblocks)
+    grid = jnp.zeros((nbr, nbc, bs, bs), values.dtype).at[rows, cols] \
+        .add(values)
+    return grid.transpose(0, 2, 1, 3).reshape(n, m)
+
+
+def spgemm_bsr_ref(a_values, a_cols, a_rowp, b_values, b_cols, b_rowp,
+                   a_shape: tuple[int, int], b_shape: tuple[int, int]
+                   ) -> jax.Array:
+    """SpGEMM dense oracle: densify both BSR operands and multiply (f32) —
+    the always-correct, never-fast baseline of the two-phase kernel
+    (DESIGN.md §15).  Returns the *dense* (n, m) product; the sparse test
+    layer compares the kernel's pattern-gathered blocks against it."""
+    ad = bsr_todense_ref(a_values, a_cols, a_rowp, a_shape)
+    bd = bsr_todense_ref(b_values, b_cols, b_rowp, b_shape)
+    return jnp.dot(ad.astype(jnp.float32),
+                   bd.astype(jnp.float32)).astype(a_values.dtype)
 
 
 def fft_stage_ref(data_re, data_im, tw_re, tw_im):

@@ -33,12 +33,15 @@ def explain(op, *args, variant=None, **kwargs):
 
 
 def explain_str(rows) -> str:
-    """Human-readable rendering of an :func:`explain` table."""
+    """Human-readable rendering of an :func:`explain` table.  When the
+    selected variant decides an output layout (``out_sharding`` — e.g. the
+    Cannon-style mesh SpGEMM, DESIGN.md §15), a trailing line names it."""
     if not rows:
         return "(no candidates)"
     head = f"{'#':>2} {'variant':<22} {'plane':<9} {'scope':<5} " \
            f"{'cost':>8} {'measured':>11}  reason"
     lines = [head, "-" * len(head)]
+    decided = None
     for row in rows:
         meas = row.get("calibrated_seconds")
         lines.append(
@@ -48,4 +51,8 @@ def explain_str(rows) -> str:
             f"{row['cost']:>8.3g} "
             f"{(f'{meas:.3e}' if meas is not None else '-'):>11}  "
             f"{row['reason']}")
+        if row.get("selected") and row.get("out_sharding"):
+            decided = row["out_sharding"]
+    if decided:
+        lines.append(f"decided out_sharding: {decided}")
     return "\n".join(lines)

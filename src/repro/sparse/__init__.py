@@ -6,28 +6,33 @@ and the SpMM entry point:
 
     A = sparse.matrix(a_dense)        # stats measured once; format chosen
     Y = sparse.spmm(A, X)             # retargets by layout, plane and mesh
+    C = sparse.spgemm(A, B)           # sparse × sparse, two-phase (§15)
 
 The paper's property — *the program text never changes* — applied to data:
 banded inputs run the gather-free DIA path, clustered blocks the MXU BSR
 path, uniform rows ELL, everything else the CSR oracle; under an ambient
-O3/O4 mesh the same two lines run row-sharded on the collectives plane.
+O3/O4 mesh the same two lines run row-sharded on the collectives plane
+(and ``spgemm`` runs the Cannon-style distribution, returning its product
+block-sharded with the layout attached as ``C.out_sharding``).
 """
-from repro.sparse.formats import (BSR, CSR, DIA, ELL, bsr_from_csr,
-                                  bsr_from_dense, csr_from_bsr)
+from repro.sparse.formats import (BSR, CSR, DIA, ELL, block_pattern,
+                                  bsr_from_csr, bsr_from_dense,
+                                  csr_from_bsr)
 from repro.sparse.maskcompiler import (MaskSpec, TileLayout, causal_layout,
                                        compile_layout, dense_mask)
 from repro.sparse.selector import (BLOCKSPARSE_MAX_DENSITY, FORMATS,
                                    autotune_block, format_of, matrix,
                                    select_format)
+from repro.sparse.spgemm import SpgemmPlan, spgemm, spgemm_symbolic
 from repro.sparse.spmm import spmm
 from repro.sparse.stats import SparseStats, sparse_stats
 
 __all__ = [
     "BSR", "CSR", "DIA", "ELL",
-    "bsr_from_dense", "bsr_from_csr", "csr_from_bsr",
+    "block_pattern", "bsr_from_dense", "bsr_from_csr", "csr_from_bsr",
     "SparseStats", "sparse_stats",
     "FORMATS", "select_format", "autotune_block", "matrix", "format_of",
     "BLOCKSPARSE_MAX_DENSITY",
     "MaskSpec", "TileLayout", "dense_mask", "compile_layout", "causal_layout",
-    "spmm",
+    "spmm", "spgemm", "spgemm_symbolic", "SpgemmPlan",
 ]

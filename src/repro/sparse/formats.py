@@ -29,8 +29,8 @@ from repro.numerics.sparse import (CSR, DIA, ELL, csr_from_dense,  # noqa: F401
                                    dia_from_dense, ell_from_csr)
 from repro.sparse.stats import DEFAULT_BLOCK, SparseStats, sparse_stats
 
-__all__ = ["BSR", "bsr_from_dense", "bsr_from_csr", "csr_from_bsr",
-           "CSR", "ELL", "DIA"]
+__all__ = ["BSR", "block_pattern", "bsr_from_dense", "bsr_from_csr",
+           "csr_from_bsr", "CSR", "ELL", "DIA"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -45,6 +45,11 @@ class BSR:
     # advisory, not part of the pytree: lost across flatten/unflatten on
     # purpose so per-matrix statistics never fragment jit caches
     stats: Optional[SparseStats] = dataclasses.field(
+        default=None, compare=False)
+    # advisory, outside the pytree like ``stats``: the NamedSharding the
+    # dispatcher decided for ``values`` when a mesh-scoped variant produced
+    # this container (DESIGN.md §15) — None for chip-built matrices
+    out_sharding: Optional[object] = dataclasses.field(
         default=None, compare=False)
 
     def tree_flatten(self):
@@ -63,6 +68,13 @@ class BSR:
         """Stored entries (block-padded — includes explicit zeros)."""
         return self.nblocks * self.block * self.block
 
+    def cost_dims(self) -> dict[str, int]:
+        """Calibration fingerprint (DESIGN.md §11): block edge + live-block
+        count, so the cost model keys differently-sparse matrices of the
+        same dense shape into different shape classes — how a sweep-measured
+        chip↔mesh SpGEMM crossover stays per-density, not per-shape."""
+        return {"block": int(self.block), "nnzb": int(self.cols.shape[0])}
+
     def todense(self) -> np.ndarray:
         out = np.zeros(self.shape, dtype=np.asarray(self.values).dtype)
         vals = np.asarray(self.values)
@@ -74,6 +86,22 @@ class BSR:
                 j = cols[p]
                 out[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs] += vals[p]
         return out
+
+
+def block_pattern(occupied: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """The CSR-style (cols, rowp) scan of a boolean block-occupancy grid —
+    the *one* pattern extraction every BSR constructor and the SpGEMM
+    symbolic phase share (DESIGN.md §15).
+
+    ``occupied`` is (nbrows, nbcols) bool; returns ``cols`` (nblocks,) int32
+    with block-column indices sorted within each row, and ``rowp``
+    (nbrows+1,) int32 block-row pointers."""
+    occupied = np.asarray(occupied, bool)
+    nbrows = occupied.shape[0]
+    rows, cols = np.nonzero(occupied)           # row-major: sorted per row
+    rowp = np.zeros(nbrows + 1, np.int32)
+    np.cumsum(np.bincount(rows, minlength=nbrows), out=rowp[1:])
+    return cols.astype(np.int32), rowp
 
 
 def bsr_from_dense(a: np.ndarray, block: int = DEFAULT_BLOCK,
@@ -91,27 +119,49 @@ def bsr_from_dense(a: np.ndarray, block: int = DEFAULT_BLOCK,
     nbrows, nbcols = n // block, m // block
     tiles = a.reshape(nbrows, block, nbcols, block).transpose(0, 2, 1, 3)
     occupied = np.any(tiles != 0, axis=(2, 3))          # (nbrows, nbcols)
-    vals, cols, rowp = [], [], [0]
-    for i in range(nbrows):
-        (js,) = np.nonzero(occupied[i])
-        vals.extend(tiles[i, j] for j in js)
-        cols.extend(js.tolist())
-        rowp.append(len(cols))
-    values = (np.stack(vals) if vals
+    cols, rowp = block_pattern(occupied)
+    brows = np.repeat(np.arange(nbrows), np.diff(rowp))
+    values = (tiles[brows, cols] if cols.size
               else np.zeros((0, block, block), dtype=a.dtype))
     return BSR(
         values=jnp.asarray(values),
-        cols=jnp.asarray(np.array(cols, dtype=np.int32)),
-        rowp=jnp.asarray(np.array(rowp, dtype=np.int32)),
+        cols=jnp.asarray(cols),
+        rowp=jnp.asarray(rowp),
         shape=(n, m), block=block,
         stats=stats if stats is not None else sparse_stats(a, block=block),
     )
 
 
 def bsr_from_csr(csr: CSR, block: int = DEFAULT_BLOCK) -> BSR:
-    """CSR → BSR via the dense staging array (host-side; the repo's inputs
-    are all small enough that the O(n²) staging is data-pipeline noise)."""
-    return bsr_from_dense(csr.todense(), block=block)
+    """CSR → BSR without dense staging: the block occupancy comes straight
+    from the CSR coordinates and runs through the same
+    :func:`block_pattern` scan as :func:`bsr_from_dense`, then the nnz
+    stream scatters into its tiles (host-side data-pipeline work)."""
+    n, m = csr.shape
+    if n % block or m % block:
+        raise ValueError(f"shape {csr.shape} does not tile by block={block}")
+    rowp_e = np.asarray(csr.rowp)
+    indx = np.asarray(csr.indx)
+    vals = np.asarray(csr.matvals)
+    row_ids = np.repeat(np.arange(n), np.diff(rowp_e))
+    nbrows, nbcols = n // block, m // block
+    occupied = np.zeros((nbrows, nbcols), bool)
+    occupied[row_ids // block, indx // block] = True
+    cols, rowp = block_pattern(occupied)
+    # (block-row, block-col) -> storage slot, then scatter the nnz stream
+    slot = np.full((nbrows, nbcols), -1, np.int64)
+    brows = np.repeat(np.arange(nbrows), np.diff(rowp))
+    slot[brows, cols] = np.arange(cols.size)
+    values = np.zeros((cols.size, block, block), vals.dtype)
+    np.add.at(values, (slot[row_ids // block, indx // block],
+                       row_ids % block, indx % block), vals)
+    return BSR(
+        values=jnp.asarray(values),
+        cols=jnp.asarray(cols),
+        rowp=jnp.asarray(rowp),
+        shape=(n, m), block=block,
+        stats=sparse_stats(csr.todense(), block=block),
+    )
 
 
 def csr_from_bsr(bsr: BSR) -> CSR:

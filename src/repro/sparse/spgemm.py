@@ -1,0 +1,313 @@
+"""``spgemm`` — sparse × sparse product on the blocked plane, as a registry op.
+
+SpGEMM is the step the element-granular planes cannot express well: the
+output's sparsity pattern is *data-dependent*, so no fixed-shape kernel can
+produce it in one pass.  The classical answer (Gustavson; Deveci et al.'s
+many-core treatment, PAPERS.md) is the **two-phase split** this module
+implements at block granularity (DESIGN.md §15):
+
+    symbolic   host-side numpy over the operands' block patterns only —
+               the pair list of contributing block products (one per
+               (A-block, B-block) meeting in an inner block-column) and the
+               output's deduplicated (cols, rowp) pattern.  Construction
+               statistics size it before it exists:
+               :meth:`~repro.sparse.stats.SparseStats.product_block_bound`
+               bounds the pair count from the per-axis live-block
+               distributions measured when the operands were built.
+    numeric    device-side fill of the output's value blocks for that fixed
+               pattern — now a static-shape problem, so it registers the
+               usual plane triple: a Pallas Gustavson kernel
+               (:mod:`repro.kernels.spgemm`) with interpret/XLA planes and
+               the dense oracle.
+
+Variants (accepts: both operands BSR, matching block, inner dims equal):
+
+    bsr          Gustavson block-row kernel — dense (bs, m) row accumulator,
+                 MXU FMAs per live pair (pallas; interpret plane for CI)
+    bsr_xla      the pair formulation: one batched einsum over the gathered
+                 block pairs + a segment-sum into output slots — flat,
+                 transparent, always available
+    dense        densify both, one MXU matmul, gather the live tiles — the
+                 always-correct never-fast baseline (Cost.ORACLE)
+    mesh_spgemm  the Cannon-style 2-D distribution over the ambient mesh
+                 (repro.distributed.numerics): pair list sharded over all
+                 axes, partials folded by a CannonPlan — preferred under an
+                 O3/O4 mesh, and it *returns the product block-sharded*
+                 (the dispatcher-propagated out_sharding, DESIGN.md §15)
+
+``sparse.spgemm(A, B)`` accepts any pairing of the four formats (CSR goes
+through the direct CSR→BSR path; ELL/DIA/dense densify host-side) — the
+blocked plane is SpGEMM's execution layer exactly as the element formats
+degrade to it for multiply-heavy work.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import registry
+from repro.core.registry import Cost
+from repro.kernels import ref
+from repro.kernels import spgemm as spgemm_k
+from repro.numerics.sparse import CSR, DIA, ELL
+from repro.sparse.formats import BSR, bsr_from_csr, bsr_from_dense
+from repro.sparse.stats import DEFAULT_BLOCK
+
+__all__ = ["spgemm", "spgemm_symbolic", "SpgemmPlan"]
+
+
+# ---------------------------------------------------------------------------
+# symbolic phase (host numpy, patterns only — no values touched)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SpgemmPlan:
+    """The symbolic phase's product: C's block pattern plus the pair list
+    every numeric formulation consumes.
+
+    ``pair_p[t]``/``pair_q[t]`` name the A/B storage blocks of the ``t``-th
+    contributing product and ``pair_r[t]`` the C slot it accumulates into —
+    pairs are ordered by C slot (row-major over C's pattern), so equal-slot
+    runs are contiguous (what ``segment_sum`` and the mesh partition want).
+    """
+    c_cols: np.ndarray            # (nc,) int32 — C's block-column indices
+    c_rowp: np.ndarray            # (nbrows+1,) int32 — C's block-row pointers
+    pair_p: np.ndarray            # (npairs,) int32 — A block per product
+    pair_q: np.ndarray            # (npairs,) int32 — B block per product
+    pair_r: np.ndarray            # (npairs,) int32 — C slot per product
+    nbrows: int                   # C's block-row count
+    nbcols: int                   # C's block-column count
+
+    @property
+    def nc(self) -> int:
+        return int(self.c_cols.shape[0])
+
+    @property
+    def npairs(self) -> int:
+        return int(self.pair_p.shape[0])
+
+
+def _empty_plan(nbrows: int, nbcols: int) -> SpgemmPlan:
+    z = np.zeros(0, np.int32)
+    return SpgemmPlan(c_cols=z, c_rowp=np.zeros(nbrows + 1, np.int32),
+                      pair_p=z, pair_q=z, pair_r=z,
+                      nbrows=nbrows, nbcols=nbcols)
+
+
+def spgemm_symbolic(a: BSR, b: BSR) -> SpgemmPlan:
+    """Compute C = A·B's block pattern and pair list from the operands'
+    patterns alone (host-side data-pipeline work, like every converter).
+
+    Gustavson at block granularity, vectorised: every A block ``p`` in
+    inner block-column ``k`` pairs with every B block ``q`` in block-row
+    ``k`` — a ragged arange over B's row extents.  The flat (row, col) keys
+    of the products dedup into C's pattern (``np.unique`` returns them
+    row-major sorted — CSR order for free) and the inverse permutation *is*
+    ``pair_r``.  When both operands carry construction statistics, the
+    measured :meth:`~repro.sparse.stats.SparseStats.product_block_bound`
+    upper-bounds the key accumulator before it is built — the two-phase
+    algorithm's "size the symbolic workspace from cheap per-axis counts"
+    step — and the realised pair count is asserted against it."""
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"inner dims differ: {a.shape} @ {b.shape}")
+    if a.block != b.block:
+        raise ValueError(f"block mismatch: {a.block} vs {b.block}")
+    a_rowp = np.asarray(a.rowp).astype(np.int64)
+    b_rowp = np.asarray(b.rowp).astype(np.int64)
+    # only the blocks rowp references are live: a mesh-produced operand pads
+    # its storage to the shard width (zero blocks past rowp[-1]) and those
+    # must not generate pairs
+    a_cols = np.asarray(a.cols).astype(np.int64)[:int(a_rowp[-1])]
+    b_cols = np.asarray(b.cols).astype(np.int64)[:int(b_rowp[-1])]
+    nbrows = a_rowp.size - 1
+    nbcols = b.shape[1] // b.block
+    if a_cols.size == 0 or b_cols.size == 0:
+        return _empty_plan(nbrows, nbcols)
+
+    # ragged arange: A block p (inner column k) meets the b_rowp[k]..[k+1]
+    # run of B blocks; repeat/cumsum expresses all runs without a python loop
+    starts = b_rowp[a_cols]
+    counts = b_rowp[a_cols + 1] - starts
+    total = int(counts.sum())
+    if (a.stats is not None and b.stats is not None
+            and a.stats.block == a.block and b.stats.block == b.block
+            and a.stats.block_col_counts and b.stats.block_row_counts):
+        bound = a.stats.product_block_bound(b.stats)
+        assert total <= bound, \
+            f"pair count {total} exceeds stats bound {bound}"
+    if total == 0:
+        return _empty_plan(nbrows, nbcols)
+    pair_p = np.repeat(np.arange(a_cols.size), counts)
+    offs = np.arange(total) - np.repeat(np.cumsum(counts) - counts, counts)
+    pair_q = np.repeat(starts, counts) + offs
+
+    # dedup the product coordinates into C's pattern; unique's sort order is
+    # row-major (i·nbcols + j), i.e. CSR order, and the inverse map is the
+    # slot index of every pair
+    a_rows = np.repeat(np.arange(nbrows), np.diff(a_rowp))
+    key = a_rows[pair_p] * nbcols + b_cols[pair_q]
+    uniq, pair_r = np.unique(key, return_inverse=True)
+    c_cols = (uniq % nbcols).astype(np.int32)
+    c_rowp = np.zeros(nbrows + 1, np.int32)
+    np.cumsum(np.bincount(uniq // nbcols, minlength=nbrows), out=c_rowp[1:])
+    order = np.argsort(pair_r, kind="stable")     # slot-contiguous pairs
+    return SpgemmPlan(c_cols=c_cols, c_rowp=c_rowp,
+                      pair_p=pair_p[order].astype(np.int32),
+                      pair_q=pair_q[order].astype(np.int32),
+                      pair_r=pair_r[order].astype(np.int32),
+                      nbrows=nbrows, nbcols=nbcols)
+
+
+def _assemble(plan: SpgemmPlan, vals: jax.Array, a: BSR, b: BSR) -> BSR:
+    return BSR(values=vals, cols=jnp.asarray(plan.c_cols),
+               rowp=jnp.asarray(plan.c_rowp),
+               shape=(a.shape[0], b.shape[1]), block=a.block)
+
+
+# ---------------------------------------------------------------------------
+# numeric phase, chip variants
+# ---------------------------------------------------------------------------
+
+def _takes_bsr_pair(a, b, **_):
+    return (isinstance(a, BSR) and isinstance(b, BSR)
+            and a.block == b.block and a.shape[1] == b.shape[0])
+
+
+def _kernel_variant(interpret):
+    def impl(a: BSR, b: BSR, **_) -> BSR:
+        plan = spgemm_symbolic(a, b)
+        vals = spgemm_k.spgemm_bsr(
+            a.values, a.cols, a.rowp, b.values, b.cols, b.rowp,
+            jnp.asarray(plan.c_cols), jnp.asarray(plan.c_rowp),
+            ncols=b.shape[1], interpret=interpret)
+        return _assemble(plan, vals, a, b)
+    return impl
+
+
+@functools.partial(jax.jit, static_argnames=("nc",))
+def _pair_core(a_vals, b_vals, pp, pq, pr, nc):
+    """The pair formulation: gather both blocks of every contributing
+    product, one batched (bs, bs) einsum, segment-sum into C slots — the
+    XLA-transparent dual of the Gustavson kernel (and exactly the per-device
+    program of the mesh variant)."""
+    prod = jnp.einsum("pij,pjk->pik", a_vals[pp].astype(jnp.float32),
+                      b_vals[pq].astype(jnp.float32))
+    return jax.ops.segment_sum(prod, pr, num_segments=nc) \
+        .astype(a_vals.dtype)
+
+
+def _spgemm_xla(a: BSR, b: BSR, **_) -> BSR:
+    plan = spgemm_symbolic(a, b)
+    bs = a.block
+    if plan.nc == 0 or plan.npairs == 0:
+        return _assemble(plan, jnp.zeros((plan.nc, bs, bs), a.values.dtype),
+                         a, b)
+    vals = _pair_core(a.values, b.values,
+                      jnp.asarray(plan.pair_p), jnp.asarray(plan.pair_q),
+                      jnp.asarray(plan.pair_r), nc=plan.nc)
+    return _assemble(plan, vals, a, b)
+
+
+_dense_core = jax.jit(ref.spgemm_bsr_ref,
+                      static_argnames=("a_shape", "b_shape"))
+
+
+def _spgemm_dense(a: BSR, b: BSR, **_) -> BSR:
+    """Dense oracle: densify both operands, one full matmul, gather the
+    symbolic pattern's live tiles back out."""
+    plan = spgemm_symbolic(a, b)
+    bs = a.block
+    if plan.nc == 0:
+        return _assemble(plan, jnp.zeros((0, bs, bs), a.values.dtype), a, b)
+    dense = _dense_core(a.values, a.cols, a.rowp, b.values, b.cols, b.rowp,
+                        a_shape=a.shape, b_shape=b.shape)
+    tiles = dense.reshape(plan.nbrows, bs, plan.nbcols, bs) \
+        .transpose(0, 2, 1, 3)
+    brows = np.repeat(np.arange(plan.nbrows), np.diff(plan.c_rowp))
+    vals = tiles[jnp.asarray(brows), jnp.asarray(plan.c_cols)]
+    return _assemble(plan, vals, a, b)
+
+
+# costs reuse the BSR formulation rank across planes, exactly like spmm's
+# triple (DESIGN.md §11); the mesh variant registers from
+# repro.distributed.numerics with scope="mesh"
+registry.register("spgemm", "bsr", _kernel_variant(False), plane="pallas",
+                  cost=Cost.formulation(Cost.BSR, "pallas"),
+                  accepts=_takes_bsr_pair,
+                  doc="Gustavson block-row kernel, dense row accumulator "
+                      "(kernels/spgemm.py)")
+registry.register("spgemm", "bsr_interpret", _kernel_variant(True),
+                  plane="interpret",
+                  cost=Cost.formulation(Cost.BSR, "interpret"),
+                  accepts=_takes_bsr_pair)
+registry.register("spgemm", "bsr_xla", _spgemm_xla, plane="xla",
+                  cost=Cost.formulation(Cost.BSR, "xla"),
+                  accepts=_takes_bsr_pair,
+                  doc="pair einsum + segment-sum into output slots")
+registry.register("spgemm", "dense", _spgemm_dense, cost=Cost.ORACLE,
+                  accepts=_takes_bsr_pair,
+                  doc="dense oracle: densify both, full matmul, gather "
+                      "live tiles")
+
+
+# ---------------------------------------------------------------------------
+# the public op: any format pairing converges on the blocked plane
+# ---------------------------------------------------------------------------
+
+def _densify(x) -> np.ndarray:
+    """Host-side dense view of an element-format operand (conversion-path
+    work only — the BSR fast paths never touch this)."""
+    if isinstance(x, CSR):
+        return x.todense()
+    if isinstance(x, ELL):
+        vals = np.asarray(x.values)
+        cols = np.asarray(x.cols)
+        out = np.zeros(x.shape, vals.dtype)
+        rows = np.repeat(np.arange(x.shape[0]), vals.shape[1])
+        np.add.at(out, (rows, cols.ravel()), vals.ravel())
+        return out
+    if isinstance(x, DIA):
+        diags = np.asarray(x.diags)
+        out = np.zeros(x.shape, diags.dtype)
+        idx = np.arange(x.shape[0])
+        for d, off in enumerate(x.offsets):
+            src = idx + off
+            ok = (src >= 0) & (src < x.shape[1])
+            out[idx[ok], src[ok]] = diags[d][ok]
+        return out
+    return np.asarray(x)
+
+
+def _as_bsr(x, block: int) -> BSR:
+    if isinstance(x, BSR) and x.block == block:
+        return x
+    if (isinstance(x, CSR) and x.shape[0] % block == 0
+            and x.shape[1] % block == 0):
+        return bsr_from_csr(x, block=block)
+    dense = x.todense() if isinstance(x, BSR) else _densify(x)
+    return bsr_from_dense(np.asarray(dense), block=block)
+
+
+def spgemm(a, b, *, block: Optional[int] = None,
+           variant: Optional[str] = None) -> BSR:
+    """``C = A @ B`` for sparse operands; returns a :class:`BSR` container.
+
+    Both operands land on the blocked plane (any of BSR/CSR/ELL/DIA or a
+    dense host array; mismatched blocks re-tile to ``block``, default the
+    first BSR operand's edge), then the registry dispatches the numeric
+    phase: the Cannon-style ``mesh_spgemm`` under an ambient O3/O4 mesh —
+    whose result comes back with its decided :class:`NamedSharding`
+    attached as ``C.out_sharding`` — degrading to the chip Gustavson
+    kernel/planes without one.  ``variant=`` pins one (DESIGN.md §6)."""
+    bs = block or (a.block if isinstance(a, BSR)
+                   else b.block if isinstance(b, BSR) else DEFAULT_BLOCK)
+    aa = _as_bsr(a, bs)
+    bb = _as_bsr(b, bs)
+    if aa.shape[1] != bb.shape[0]:
+        raise ValueError(f"inner dims differ: {aa.shape} @ {bb.shape}")
+    return registry.dispatch("spgemm", aa, bb, variant=variant)

@@ -48,6 +48,12 @@ class SparseStats:
     block: int                # probed block edge (BSR candidate)
     nblocks: int              # occupied block×block tiles
     block_fill: float         # nnz / (nblocks * block²)  — BSR efficiency
+    # SpGEMM symbolic-phase inputs (DESIGN.md §15): how the live blocks
+    # distribute over block-rows and block-columns, at the probed edge.
+    # These are what sizes the Gustavson accumulator *before* the product's
+    # pattern exists — see :meth:`product_block_bound`.
+    block_row_counts: tuple[int, ...] = ()   # live blocks per block-row
+    block_col_counts: tuple[int, ...] = ()   # live blocks per block-column
 
     @property
     def row_nnz_cv(self) -> float:
@@ -55,6 +61,23 @@ class SparseStats:
         rows, large for ragged/power-law rows (the ELL-hostile shape)."""
         return self.row_nnz_std / self.row_nnz_mean if self.row_nnz_mean \
             else 0.0
+
+    def product_block_bound(self, other: "SparseStats") -> int:
+        """Upper bound on the live blocks (and Gustavson block products) of
+        ``self @ other`` at this block edge: every pairing of a live block
+        in our block-column ``k`` with a live block in ``other``'s
+        block-row ``k`` yields at most one product — so the bound is
+        ``Σ_k col_counts_A[k] · row_counts_B[k]``.  Exact on the *product
+        count*; an over-count on the output pattern only where two products
+        land on the same (i, j) tile.  The SpGEMM symbolic phase sizes its
+        accumulator with this (DESIGN.md §15)."""
+        if self.block != other.block:
+            raise ValueError(
+                f"block mismatch: {self.block} vs {other.block}")
+        a = np.asarray(self.block_col_counts, np.int64)
+        b = np.asarray(other.block_row_counts, np.int64)
+        k = min(a.size, b.size)
+        return int(a[:k] @ b[:k])
 
     def describe(self) -> str:
         return (f"n={self.shape[0]} nnz={self.nnz} density={self.density:.4f} "
@@ -83,10 +106,18 @@ def sparse_stats(a: np.ndarray, block: int = DEFAULT_BLOCK) -> SparseStats:
     else:
         bandwidth, ndiags = 0, 0
     row_max = int(per_row.max()) if n else 0
-    # occupied block×block tiles (ceil-divided edges)
-    nb = int(np.unique(
-        (rows // block) * (-(-m // block)) + (cols // block)).size) if nnz \
-        else 0
+    # occupied block×block tiles (ceil-divided edges), plus how they
+    # distribute over block-rows/-columns — the SpGEMM symbolic inputs
+    nbrows, nbcols = -(-n // block), -(-m // block)
+    if nnz:
+        blk_ids = np.unique((rows // block) * nbcols + (cols // block))
+        nb = int(blk_ids.size)
+        brc = np.bincount(blk_ids // nbcols, minlength=nbrows)
+        bcc = np.bincount(blk_ids % nbcols, minlength=nbcols)
+    else:
+        nb = 0
+        brc = np.zeros(nbrows, np.int64)
+        bcc = np.zeros(nbcols, np.int64)
     return SparseStats(
         shape=(n, m), nnz=nnz,
         density=nnz / (n * m) if n * m else 0.0,
@@ -98,4 +129,6 @@ def sparse_stats(a: np.ndarray, block: int = DEFAULT_BLOCK) -> SparseStats:
         ell_fill=nnz / (n * row_max) if row_max else 0.0,
         block=block, nblocks=nb,
         block_fill=nnz / (nb * block * block) if nb else 0.0,
+        block_row_counts=tuple(int(c) for c in brc),
+        block_col_counts=tuple(int(c) for c in bcc),
     )
